@@ -1,0 +1,89 @@
+"""Kernel benchmark: XLA-path timing + Pallas VMEM/traffic accounting.
+
+Pallas-TPU kernels cannot be timed on this CPU host (interpret mode runs
+the kernel body in Python). What IS measurable and meaningful here:
+  * the ref/XLA path wall time (the baseline the kernel replaces),
+  * the analytic HBM-traffic model of both paths (the quantity the kernel
+    optimizes; derived from shapes, reported as a ratio).
+
+xent traffic model (T tokens, V vocab, f32):
+  naive log-softmax path: read logits (2·TV: max+sub pass), write logsoftmax
+  (TV), read for gather -> ~4·TV + backward re-reads ~2·TV
+  fused kernel: read logits once fwd (TV) + once bwd (TV), save [T] LSE
+decode_attn (T cache positions, bf16): XLA materializes [H, T] scores in
+  HBM (+2 passes for softmax); flash keeps them in VMEM: traffic -> K/V
+  read once (the optimum).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, trials=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(trials):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / trials * 1e3
+
+
+def xent_traffic_ratio(t: int, v: int) -> float:
+    naive = 6 * t * v * 4  # materialized log-softmax fwd+bwd (f32)
+    fused = 2 * t * v * 2 + 3 * t * 4  # logits bf16 read fwd+bwd + [T] lse
+    return naive / fused
+
+
+def decode_traffic_ratio(t: int, hq: int, hkv: int, d: int) -> float:
+    kv = 2 * t * hkv * d * 2  # K/V bf16 read once (both paths)
+    scores_hbm = 3 * hq * t * 4  # XLA: write+read+read [Hq, T] f32 scores
+    return (kv + scores_hbm) / kv
+
+
+def main(fast: bool = False) -> list[str]:
+    out = ["table,kernel,shape,ms_ref_path,traffic_ratio_vs_naive"]
+    shapes = [(2048, 8192)] if fast else [(2048, 8192), (4096, 32768)]
+    for t, v in shapes:
+        logits = jax.random.normal(jax.random.key(0), (t, v), jnp.float32)
+        labels = jax.random.randint(jax.random.key(1), (t,), 0, v)
+        f = jax.jit(lambda l, y: ops.xent_loss(l, y, "ref"))
+        ms = _time(f, logits, labels)
+        out.append(
+            f"kernel,xent,T{t}xV{v},{ms:.2f},{xent_traffic_ratio(t, v):.2f}"
+        )
+    for t in ((4096,) if fast else (4096, 32768)):
+        b, hq, hkv, d = 4, 32, 8, 128
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, t, hkv, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, t, hkv, d), jnp.float32)
+        valid = jnp.ones((b, t), bool)
+        f = jax.jit(lambda q, k, v, m: ops.decode_attn(q, k, v, m, "ref"))
+        ms = _time(f, q, k, v, valid)
+        out.append(
+            f"kernel,decode_attn,T{t},{ms:.2f},{decode_traffic_ratio(t, hq, hkv, d):.2f}"
+        )
+    # ssd: XLA chunked vs sequential-recurrence cost
+    bsz, s, h, p, g, n = 2, 2048, 8, 64, 1, 64
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (bsz, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (bsz, s, g, n)) * 0.5
+    cm = jax.random.normal(ks[4], (bsz, s, g, n)) * 0.5
+    f_chunk = jax.jit(lambda *args: ops.ssd_scan(*args, chunk=128, impl="ref"))
+    f_seq = jax.jit(lambda *args: ref.ssd_ref(*args))
+    ms_c = _time(f_chunk, x, dt, a, bm, cm)
+    ms_s = _time(f_seq, x, dt, a, bm, cm)
+    out.append(f"kernel,ssd_chunked_vs_sequential,S{s},{ms_c:.2f},{ms_s / max(ms_c, 1e-9):.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,90 @@
+"""Roofline report: read experiments/dryrun/*.json -> per-cell table.
+
+The dry-run (repro.launch.dryrun) writes one JSON per (arch, shape, mesh)
+with trip-count-aware FLOPs / HBM bytes / collective wire bytes from the
+partitioned HLO. This harness renders the §Roofline table: three terms in
+seconds, dominant bottleneck, MODEL_FLOPS ratio, fits-HBM — and flags what
+would move the dominant term (consumed by the §Perf iteration log).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "experiments", "dryrun"
+)
+
+
+def load_cells(pattern: str = "*.json", tag: str = "") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("tag", "") != tag:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def hint(rec: dict) -> str:
+    dom = rec["roofline"]["dominant"]
+    kind = rec["kind"]
+    if dom == "t_collective_s":
+        return "reduce FSDP/SP all-gathers: coarser param sharding or overlap"
+    if dom == "t_memory_s" and kind == "prefill":
+        return "flash kernel keeps score tiles in VMEM (XLA path spills)"
+    if dom == "t_memory_s" and kind == "decode":
+        return "decode is HBM-bw bound by design: KV reads ~= roofline"
+    if dom == "t_memory_s":
+        return "remat/fusion: cut activation round-trips"
+    return "MXU-bound: good — check useful-flops ratio for waste"
+
+
+def table(cells: list[dict]) -> list[str]:
+    hdr = (
+        "arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,dominant,"
+        "useful_over_hlo_flops,mem_gb_per_dev,fits_16gb,hint"
+    )
+    out = [hdr]
+    for r in cells:
+        if r.get("skipped"):
+            out.append(
+                f"{r['arch']},{r['shape']},{r['mesh']},,,,SKIPPED,,,,{r['skipped'][:60]}"
+            )
+            continue
+        if not r.get("ok"):
+            out.append(f"{r['arch']},{r['shape']},{r['mesh']},,,,FAILED,,,,")
+            continue
+        rf = r["roofline"]
+        out.append(
+            ",".join(
+                [
+                    r["arch"],
+                    r["shape"],
+                    r["mesh"],
+                    f"{rf['t_compute_s']:.3e}",
+                    f"{rf['t_memory_s']:.3e}",
+                    f"{rf['t_collective_s']:.3e}",
+                    rf["dominant"].replace("t_", "").replace("_s", ""),
+                    f"{r['model_flops']['ratio_useful_over_hlo']:.3f}",
+                    f"{r['memory']['corrected_total_per_device'] / 1e9:.2f}",
+                    str(bool(r["memory"]["fits_16gb_hbm"])),
+                    hint(r),
+                ]
+            )
+        )
+    return out
+
+
+def main(fast: bool = False) -> list[str]:
+    cells = load_cells()
+    if not cells:
+        return ["table,NOTE", "roofline,run `python -m repro.launch.dryrun --all` first"]
+    return table(cells)
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

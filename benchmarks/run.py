@@ -1,0 +1,62 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default is the fast profile (CPU-minutes); --full reproduces the paper's
+comparison grids at full step counts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--only",
+        default="",
+        help="comma-list: fig1,fig2,table3,selection,kernels,roofline",
+    )
+    args = ap.parse_args()
+    fast = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (
+        fig1_linreg,
+        fig2_mnist,
+        kernel_bench,
+        roofline,
+        selection_bench,
+        table3_lm_proxy,
+    )
+
+    sections = [
+        ("fig1", "Fig.1 linear regression (clean + outliers)", fig1_linreg),
+        ("fig2", "Fig.2 MNIST-like classification", fig2_mnist),
+        ("table3", "Table 3 proxy (LM, full OBFTF train step)", table3_lm_proxy),
+        ("selection", "Selection micro-benchmark", selection_bench),
+        ("kernels", "Kernel benchmark", kernel_bench),
+        ("roofline", "Roofline (from dry-run artifacts)", roofline),
+    ]
+    failures = 0
+    for key, title, mod in sections:
+        if only and key not in only:
+            continue
+        print(f"\n=== {title} ===")
+        t0 = time.time()
+        try:
+            for line in mod.main(fast=fast):
+                print(line)
+            print(f"[{key}: {time.time() - t0:.1f}s]")
+        except Exception as e:  # report, continue other sections
+            failures += 1
+            print(f"[{key} FAILED: {type(e).__name__}: {e}]")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

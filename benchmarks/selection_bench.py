@@ -1,0 +1,53 @@
+"""Selection micro-benchmark: us/call + objective quality per method.
+
+Two numbers per (method, n): jitted wall time per call on this host, and
+the paper-objective residual |mean(selected) - mean(batch)| (median over
+trials). Shows the engineering trade OBFTF makes vs the paper's CBC MIP:
+the greedy+swap selector is O(us) on-device vs a host MIP round-trip,
+at near-optimal residual (see tests/test_selection.py vs brute force).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selection import SelectionConfig, select, subset_mean_residual
+
+METHODS = ("uniform", "prob", "mink", "maxk", "obftf_prox", "obftf")
+SIZES = (128, 1024, 4096)
+
+
+def bench_one(method: str, n: int, trials: int = 20) -> tuple[float, float]:
+    cfg = SelectionConfig(method=method, ratio=0.25)
+    b = cfg.budget(n)
+    f = jax.jit(lambda r, l: select(cfg, r, l, b))
+    rng = jax.random.key(0)
+    losses = jax.random.normal(rng, (n,)) * 2 + 5
+    f(rng, losses).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for i in range(trials):
+        f(jax.random.key(i), losses).block_until_ready()
+    us = (time.perf_counter() - t0) / trials * 1e6
+    resids = [
+        float(subset_mean_residual(losses, f(jax.random.key(i), losses)))
+        for i in range(10)
+    ]
+    return us, float(np.median(resids))
+
+
+def main(fast: bool = False) -> list[str]:
+    sizes = SIZES[:2] if fast else SIZES
+    out = ["table,method,n,us_per_call,median_residual"]
+    for n in sizes:
+        for m in METHODS:
+            us, resid = bench_one(m, n)
+            out.append(f"selection,{m},{n},{us:.1f},{resid:.5f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,89 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# ^ example-sized virtual mesh (the real dry-run uses 512; see
+#   repro.launch.dryrun). Must precede any jax import.
+
+"""Multi-pod distribution demo at example scale.
+
+    PYTHONPATH=src python examples/multipod_demo.py
+
+Builds a (pod=2, data=2, model=2) mesh from 8 virtual devices, lowers the
+OBFTF train step for a reduced llama3 with the production sharding rules,
+and ACTUALLY RUNS a few steps — proving the shard_map selection, FSDP/TP
+parameter placement, ZeRO-1 moments and the compressed cross-pod gradient
+path all execute, not just compile.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.obftf import OBFTFConfig, make_train_step
+from repro.core.selection import SelectionConfig
+from repro.distributed.sharding import DEFAULT_RULES, use_rules
+from repro.launch import hlo_analysis as H
+from repro.launch.specs import batch_specs, state_specs
+from repro.configs.shapes import ShapeCell
+from repro.models import model as Mdl
+from repro.models.params import materialize
+from repro.optim import adamw, constant
+
+
+def main():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rules = dataclasses.replace(
+        DEFAULT_RULES, batch_axes=("pod", "data"), seq_axis="model"
+    )
+    cfg = dataclasses.replace(
+        configs.get_smoke("llama3_8b"),
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512,
+    )
+    cell = ShapeCell("demo", seq_len=64, global_batch=16, kind="train")
+
+    state_abs, state_sh, opt = state_specs(cfg, mesh, rules)
+    step = make_train_step(
+        Mdl.loss_fn(cfg), opt,
+        OBFTFConfig(selection=SelectionConfig(method="obftf", ratio=0.25)),
+        mesh=mesh, dp_axes=rules.batch_axes,
+    )
+    bspecs = batch_specs(cfg, cell, mesh, rules)
+
+    with use_rules(mesh, rules):
+        jitted = jax.jit(step, out_shardings=(state_sh, None))
+        lowered = jitted.lower(state_abs, bspecs, jax.random.key(0))
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        print(f"compiled for {mesh.devices.size} devices "
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+        print(f"per-device: args {mem.argument_size_in_bytes/1e6:.2f}MB "
+              f"temp {mem.temp_size_in_bytes/1e6:.2f}MB")
+        costs = H.analyze(compiled.as_text(), dcn_block=4)
+        print(f"per-device/step: {costs.flops/1e6:.1f} MFLOP, "
+              f"{costs.hbm_bytes/1e6:.1f} MB moved")
+        for kind, v in sorted(costs.coll.items()):
+            print(f"  collective {kind:22s} x{v['count']:4.0f} "
+                  f"{v['bytes']/1e3:.1f} KB wire")
+
+        # now actually run it on the virtual mesh
+        rng = jax.random.key(0)
+        params = materialize(Mdl.param_specs(cfg), rng)
+        state = {"params": params, "opt": opt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        state = jax.device_put(state, state_sh)
+        for s in range(5):
+            batch = {
+                "tokens": jax.random.randint(jax.random.key(s), (16, 64), 0, 512),
+                "labels": jax.random.randint(jax.random.key(s + 1), (16, 64), 0, 512),
+            }
+            state, m = jitted(state, batch, jax.random.key(100 + s))
+            print(f"step {s}: loss={float(m['loss']):.4f} "
+                  f"kept={int(m['kept'])}/16 on "
+                  f"{mesh.devices.size} devices")
+    print("multi-pod demo OK")
+
+
+if __name__ == "__main__":
+    main()

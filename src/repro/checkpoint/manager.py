@@ -1,0 +1,180 @@
+"""Fault-tolerant checkpointing: async, atomic, keep-k, restart-exact.
+
+Requirements at 1000+ nodes (and what implements them here):
+  * a step's checkpoint must never be observable half-written
+      -> write into `step_<n>.tmp/`, fsync, manifest LAST, atomic rename;
+  * saving must not stall the train loop
+      -> `CheckpointManager.save` hands the (host-fetched) arrays to a
+         background thread; `wait()` joins at exit/preemption;
+  * disk must not fill over a long run
+      -> keep-k pruning of COMPLETE checkpoints only;
+  * a torn/interrupted save must be invisible to restore
+      -> `latest_step` only trusts directories whose manifest parses and
+         whose leaf files all exist; `*.tmp` is garbage-collected on start;
+  * restore must be layout-independent
+      -> leaves are saved by tree path, restored into the target pytree
+         structure (which may be sharded differently than at save time).
+
+In a real multi-pod job each host saves only its addressable shards; here
+(single host) the full array is saved — the manifest format already carries
+per-leaf shapes/dtypes so the multi-host extension is additive.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, state: Any) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(state)
+    manifest = {"step": step, "leaves": {}}
+    for key, arr in flat.items():
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    return final
+
+
+def _is_complete(path: str) -> bool:
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.exists(mpath):
+        return False
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+        return all(
+            os.path.exists(os.path.join(path, leaf["file"]))
+            for leaf in manifest["leaves"].values()
+        )
+    except (json.JSONDecodeError, KeyError, OSError):
+        return False
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            full = os.path.join(directory, name)
+            if _is_complete(full):
+                steps.append(int(name[len("step_") :]))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(
+    directory: str,
+    step: int,
+    target: Any,
+    put: Optional[Callable[[np.ndarray, Any], Any]] = None,
+) -> Any:
+    """Restore into `target`'s structure. `put(np_array, target_leaf)` lets
+    the caller device_put with the target's sharding (multi-pod restore)."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(target)
+    out = []
+    for pth, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+        meta = manifest["leaves"][key]
+        arr = np.load(os.path.join(path, meta["file"]))
+        if arr.dtype.kind == "V":  # ml_dtypes (bf16, fp8) round-trip as void
+            import ml_dtypes
+
+            arr = arr.view(np.dtype(getattr(ml_dtypes, meta["dtype"])))
+        out.append(put(arr, leaf) if put is not None else arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Async keep-k checkpointing with torn-save garbage collection."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+        for name in os.listdir(directory):  # GC torn saves from a crash
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+
+    def save(self, step: int, state: Any, block: bool = False) -> None:
+        self.wait()  # one in-flight save; join the previous
+        host_state = jax.tree.map(np.asarray, state)  # fetch before async
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_state)
+                self._prune()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _prune(self) -> None:
+        steps = sorted(
+            int(n[len("step_") :])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and _is_complete(os.path.join(self.directory, n))
+        )
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:010d}"),
+                ignore_errors=True,
+            )
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def restore(self, step: int, target: Any, put=None) -> Any:
+        return load_checkpoint(self.directory, step, target, put)

@@ -1,0 +1,48 @@
+"""Assigned input-shape cells (LM transformer shape set; 4 per arch).
+
+``train_4k`` lowers train_step; ``prefill_32k`` lowers prefill_step;
+``decode_32k`` / ``long_500k`` lower serve_step (one new token against a
+KV/state cache of seq_len). ``long_500k`` requires a sub-quadratic arch —
+`runnable()` encodes the assignment's skip rule and DESIGN.md documents the
+skips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+SHAPE_NAMES = tuple(SHAPES)
+
+
+def runnable(cfg: ModelConfig, shape: str) -> bool:
+    """Assignment rule: long_500k only for sub-quadratic (SSM/hybrid/SWA)."""
+    if shape == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> str:
+    if shape == "long_500k" and not cfg.subquadratic:
+        return (
+            f"{cfg.name}: pure full-attention arch — 512k KV decode is "
+            "quadratic-history; skipped per assignment (see DESIGN.md)"
+        )
+    return ""

@@ -1,0 +1,24 @@
+# The paper's primary contribution: OBFTF batch subsampling (Algorithm 1)
+# as a composable JAX transform, plus the per-instance loss ledger that
+# realizes the "record information from serving forwards" production story.
+from repro.core.history import HistoryConfig, LossHistory  # noqa: F401
+from repro.core.obftf import (  # noqa: F401
+    OBFTFConfig,
+    make_eval_step,
+    make_train_step,
+    model_inputs,
+    select_and_gather,
+)
+from repro.core.selection import (  # noqa: F401
+    METHODS,
+    SelectionConfig,
+    brute_force_obftf,
+    select,
+    select_maxk,
+    select_mink,
+    select_obftf,
+    select_obftf_prox,
+    select_prob,
+    select_uniform,
+    subset_mean_residual,
+)

@@ -1,0 +1,120 @@
+"""Per-instance loss history recorded from inference forward passes.
+
+The paper's production insight (§1): deployed systems already run forward
+passes at serving time; record "a constant amount of information per
+instance" from them and use it when composing training batches. This module
+is that record — a fixed-capacity host-side store (one slot per instance id,
+hashed) holding an EMA of observed losses, an observation count, and the
+last-seen step. The data pipeline uses ``priority`` to bias candidate
+selection toward instances whose loss signal says they still matter, and the
+train step's in-batch OBFTF selection then does the fine-grained pick.
+
+Host-side by design: in production this is the feature-store/ledger sidecar,
+not device memory. It is deterministic, picklable (checkpointable), and
+O(1) per update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HistoryConfig:
+    capacity: int = 1 << 16  # slots (power of two)
+    decay: float = 0.9  # EMA decay for recorded losses
+    unseen_priority: float = 1e6  # instances never scored sort first
+    staleness_half_life: float = 10_000.0  # steps; stale records decay back up
+
+
+class LossHistory:
+    """Fixed-capacity EMA loss ledger keyed by instance id."""
+
+    def __init__(self, cfg: HistoryConfig = HistoryConfig()):
+        assert cfg.capacity & (cfg.capacity - 1) == 0, "capacity must be 2^k"
+        self.cfg = cfg
+        n = cfg.capacity
+        self.ema = np.zeros((n,), np.float32)
+        self.count = np.zeros((n,), np.int64)
+        self.last_seen = np.full((n,), -1, np.int64)
+        self.owner = np.full((n,), -1, np.int64)  # id owning the slot
+
+    # -- addressing ---------------------------------------------------------
+
+    def _slot(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        # Fibonacci hashing keeps sequential production ids well spread.
+        h = (ids * np.int64(-7046029254386353131)) & np.int64(2**63 - 1)
+        return (h >> 16) & (self.cfg.capacity - 1)
+
+    # -- writes -------------------------------------------------------------
+
+    def record(self, ids: np.ndarray, losses: np.ndarray, step: int) -> None:
+        """Record per-instance losses observed at ``step`` (serving or train).
+
+        Collisions evict: the newest instance owns the slot (production
+        ledgers are lossy caches; eviction = falling back to unseen).
+        """
+        ids = np.asarray(ids, np.int64)
+        losses = np.asarray(losses, np.float32)
+        slots = self._slot(ids)
+        fresh = self.owner[slots] != ids
+        d = self.cfg.decay
+        prev = np.where(fresh, losses, self.ema[slots])
+        self.ema[slots] = d * prev + (1.0 - d) * losses
+        self.count[slots] = np.where(fresh, 1, self.count[slots] + 1)
+        self.last_seen[slots] = step
+        self.owner[slots] = ids
+
+    # -- reads --------------------------------------------------------------
+
+    def lookup(self, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Return (ema_loss, seen_mask) for instance ids."""
+        ids = np.asarray(ids, np.int64)
+        slots = self._slot(ids)
+        seen = self.owner[slots] == ids
+        return np.where(seen, self.ema[slots], 0.0).astype(np.float32), seen
+
+    def priority(self, ids: np.ndarray, step: int) -> np.ndarray:
+        """Training priority: unseen ≫ high-EMA-loss; staleness re-inflates.
+
+        score = unseen ? unseen_priority
+                       : ema * 2^((step - last_seen)/half_life)
+        """
+        ids = np.asarray(ids, np.int64)
+        slots = self._slot(ids)
+        seen = self.owner[slots] == ids
+        age = np.maximum(step - self.last_seen[slots], 0).astype(np.float32)
+        boost = np.exp2(age / self.cfg.staleness_half_life)
+        score = self.ema[slots] * boost
+        return np.where(seen, score, self.cfg.unseen_priority).astype(np.float32)
+
+    def top_candidates(
+        self, ids: np.ndarray, k: int, step: int, rng: Optional[np.random.Generator] = None
+    ) -> np.ndarray:
+        """Pick k of ``ids`` by priority (ties broken randomly)."""
+        score = self.priority(ids, step)
+        if rng is not None:
+            score = score * (1.0 + 1e-3 * rng.random(score.shape, dtype=np.float32))
+        k = min(k, len(ids))
+        part = np.argpartition(-score, k - 1)[:k]
+        return np.asarray(ids)[part]
+
+    # -- checkpointing ------------------------------------------------------
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        return {
+            "ema": self.ema,
+            "count": self.count,
+            "last_seen": self.last_seen,
+            "owner": self.owner,
+        }
+
+    def load_state_dict(self, state: dict[str, np.ndarray]) -> None:
+        self.ema = np.asarray(state["ema"], np.float32).copy()
+        self.count = np.asarray(state["count"], np.int64).copy()
+        self.last_seen = np.asarray(state["last_seen"], np.int64).copy()
+        self.owner = np.asarray(state["owner"], np.int64).copy()

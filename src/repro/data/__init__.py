@@ -1,0 +1,7 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig,
+    Prefetcher,
+    SyntheticLMStream,
+    SyntheticRegression,
+    mnist_like,
+)

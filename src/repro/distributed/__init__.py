@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    activation_constraint,
+    batch_spec,
+    param_partition_specs,
+    set_rules,
+    use_rules,
+)
+from repro.distributed.compression import (  # noqa: F401
+    dequantize_int8,
+    int8_ring_all_reduce,
+    quantize_int8,
+)
+from repro.distributed.zero import zero1_partition_specs  # noqa: F401

@@ -1,0 +1,56 @@
+"""ZeRO-1: shard optimizer moments over the data axis.
+
+Params in this framework are already 2D-sharded (TP over "model", FSDP over
+"data" on the "embed" logical axis). ZeRO-1 pushes the *optimizer state*
+further: every moment tensor whose param still has a data-axis-free dim gets
+that dim sharded over "data". Because `optimizer.update` is elementwise over
+each leaf, GSPMD keeps the moment math fully sharded and only the final
+update needs param-layout output sharding — the classic ZeRO-1 collective
+schedule (reduce-scatter grads into moment shards, all-gather updates)
+emerges from propagation rather than hand-written collectives.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.params import ParamSpec, is_spec
+from repro.distributed.sharding import AxisRules, spec_for
+
+
+def _zero1_spec(spec: ParamSpec, pspec: P, mesh: Mesh, data_axis: str) -> P:
+    """Add `data_axis` to the largest unsharded, divisible dim of the param."""
+    parts = list(pspec) + [None] * (len(spec.shape) - len(pspec))
+    if any(
+        data_axis == p or (isinstance(p, tuple) and data_axis in p)
+        for p in parts
+        if p is not None
+    ):
+        return pspec  # already data-sharded (e.g. FSDP'd embed dim)
+    size = mesh.shape[data_axis]
+    best, best_dim = -1, -1
+    for i, (dim, part) in enumerate(zip(spec.shape, parts)):
+        if part is None and dim % size == 0 and dim > best:
+            best, best_dim = dim, i
+    if best_dim < 0:
+        return pspec
+    parts[best_dim] = data_axis
+    return P(*parts)
+
+
+def zero1_partition_specs(
+    specs: Any,
+    rules: AxisRules,
+    mesh: Mesh,
+    data_axis: Optional[str] = None,
+) -> Any:
+    """Moment-tensor partition specs: param specs + data-axis sharding."""
+    data_axis = data_axis or rules.batch_axes[-1]
+
+    def leaf(s: ParamSpec) -> P:
+        return _zero1_spec(s, spec_for(s, rules, mesh), mesh, data_axis)
+
+    return jax.tree.map(leaf, specs, is_leaf=is_spec)

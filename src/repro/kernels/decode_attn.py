@@ -1,0 +1,113 @@
+"""Flash decode attention for GQA serving (Pallas TPU).
+
+serve_step's hot op: one query token per sequence against a KV cache of up
+to 512k positions. The XLA path materializes [B, Hkv, G, T] scores in HBM;
+this kernel streams KV blocks through VMEM with the online-softmax
+recurrence, keeping only an [G, D] accumulator + [G, 1] (max, sumexp) per
+(batch, kv-head) — O(T) HBM reads of K/V and O(1) writes, which is the
+memory-roofline optimum for decode.
+
+Grid: (B, Hkv, T/bt) — T minor, so the softmax state carries across KV
+blocks in VMEM scratch. Query heads of one KV group (G = Hq/Hkv) ride the
+sublane dim together. Validity (cache occupancy, sliding windows, rolling
+slots) arrives as a precomputed [B, T] int8 mask, so one kernel serves all
+cache layouts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_s, s_s, acc_s):
+    ti = pl.program_id(2)
+    nt = pl.num_programs(2)
+    g, d = q_ref.shape
+    bt = k_ref.shape[0]
+
+    @pl.when(ti == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        s_s[...] = jnp.zeros_like(s_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[...].astype(F32)  # [G, D]
+    k = k_ref[...].astype(F32)  # [bt, D]
+    v = v_ref[...].astype(F32)  # [bt, D]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32
+    ) * (d**-0.5)  # [G, bt]
+    ok = valid_ref[...] > 0  # [1, bt]
+    scores = jnp.where(ok, scores, NEG_INF)
+
+    m_prev, s_prev = m_s[...], s_s[...]  # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    p = jnp.exp(scores - m_new)  # [G, bt]
+    corr = jnp.exp(m_prev - m_new)
+    s_s[...] = s_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32
+    )
+    m_s[...] = m_new
+
+    @pl.when(ti == nt - 1)
+    def _emit():
+        o_ref[...] = (acc_s[...] / jnp.maximum(s_s[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def decode_attn(
+    q: jax.Array,  # [B, Hq, D]
+    k: jax.Array,  # [B, T, Hkv, D]
+    v: jax.Array,  # [B, T, Hkv, D]
+    valid: jax.Array,  # [B, T] bool
+    *,
+    bt: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bt = min(bt, max(128, -(-t // 128) * 128))
+    pad_t = (-t) % bt
+    if pad_t:
+        k = jnp.pad(k, [(0, 0), (0, pad_t), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, pad_t), (0, 0), (0, 0)])
+        valid = jnp.pad(valid, [(0, 0), (0, pad_t)])
+    tp = t + pad_t
+
+    qr = q.reshape(b, hkv, g, d)
+    # [B, Hkv, T, D] layout so the kv-head grid dim indexes a leading axis
+    kr = k.transpose(0, 2, 1, 3)
+    vr = v.transpose(0, 2, 1, 3)
+    val = valid.astype(jnp.int8)[:, None, :]  # [B, 1, T]
+
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid=(b, hkv, tp // bt),
+        in_specs=[
+            pl.BlockSpec((None, None, g, d), lambda i, j, ti: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, bt, d), lambda i, j, ti: (i, j, ti, 0)),
+            pl.BlockSpec((None, None, bt, d), lambda i, j, ti: (i, j, ti, 0)),
+            pl.BlockSpec((None, 1, bt), lambda i, j, ti: (i, 0, ti)),
+        ],
+        out_specs=pl.BlockSpec((None, None, g, d), lambda i, j, ti: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), F32),
+            pltpu.VMEM((g, 1), F32),
+            pltpu.VMEM((g, d), F32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr, val)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,122 @@
+"""Public kernel entry points: backend dispatch + autodiff.
+
+Each op picks its implementation from (in priority order)
+  1. an explicit ``impl=`` argument,
+  2. the module default set by ``set_default_impl`` (the launcher sets
+     "pallas" on TPU hosts),
+  3. "ref" — the pure-jnp oracle, the right default on CPU where Pallas-TPU
+     kernels only run under interpret=True (orders of magnitude slower).
+
+``xent_loss`` carries a custom_vjp: forward saves only the [T] LSE (never a
+[T, V] softmax); backward recomputes grad blockwise from (logits, lse).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attn as _da
+from repro.kernels import ref as _ref
+from repro.kernels import ssd as _ssd
+from repro.kernels import xent as _xent
+
+_DEFAULT_IMPL = "ref"
+_VALID = ("ref", "pallas", "interpret")
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in _VALID, impl
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+def _resolve(impl: Optional[str]) -> str:
+    impl = impl or _DEFAULT_IMPL
+    assert impl in _VALID, impl
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# fused cross-entropy
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def xent_loss(logits: jax.Array, labels: jax.Array, impl: Optional[str] = None):
+    """Per-token CE: logits [T,V], labels [T] -> loss [T] f32."""
+    loss, _ = _xent_fwd_impl(logits, labels, _resolve(impl))
+    return loss
+
+
+def _xent_fwd_impl(logits, labels, impl):
+    if impl == "ref":
+        return _ref.xent_ref(logits, labels)
+    return _xent.xent_fwd(logits, labels, interpret=(impl == "interpret"))
+
+
+def _xent_fwd(logits, labels, impl):
+    loss, lse = _xent_fwd_impl(logits, labels, _resolve(impl))
+    return loss, (logits, labels, lse)
+
+
+def _xent_bwd(impl, res, g):
+    logits, labels, lse = res
+    impl = _resolve(impl)
+    if impl == "ref":
+        grad = _ref.xent_grad_ref(logits, labels, lse, g)
+    else:
+        grad = _xent.xent_bwd(
+            logits, labels, lse, g, interpret=(impl == "interpret")
+        )
+    return grad, None
+
+
+xent_loss.defvjp(_xent_fwd, _xent_bwd)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (inference only — no vjp needed)
+# ---------------------------------------------------------------------------
+
+
+def decode_attn(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    valid: jax.Array,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.decode_attn_ref(q, k, v, valid)
+    return _da.decode_attn(q, k, v, valid, interpret=(impl == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk scan
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    chunk: int = 128,
+    impl: Optional[str] = None,
+) -> tuple[jax.Array, jax.Array]:
+    impl = _resolve(impl)
+    if impl == "ref":
+        from repro.models.ssm import ssd_chunked  # chunked jnp (fast ref path)
+
+        return ssd_chunked(x, dt, a, b, c, chunk=min(chunk, x.shape[1]))
+    return _ssd.ssd(x, dt, a, b, c, chunk=chunk, interpret=(impl == "interpret"))

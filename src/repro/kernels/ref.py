@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+def xent_ref(logits: Array, labels: Array) -> tuple[Array, Array]:
+    """Per-token CE. logits [T,V], labels [T] -> (loss [T], lse [T]), f32."""
+    logits = logits.astype(F32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - picked, lse
+
+
+def xent_grad_ref(logits: Array, labels: Array, lse: Array, g: Array) -> Array:
+    """d loss / d logits given saved lse. -> [T,V] in logits.dtype."""
+    p = jnp.exp(logits.astype(F32) - lse[:, None])
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=F32)
+    return ((p - onehot) * g[:, None]).astype(logits.dtype)
+
+
+def decode_attn_ref(
+    q: Array,  # [B, Hq, D]
+    k: Array,  # [B, T, Hkv, D]
+    v: Array,  # [B, T, Hkv, D]
+    valid: Array,  # [B, T] bool
+) -> Array:
+    """Single-token GQA decode attention -> [B, Hq, D]."""
+    b, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qr = q.reshape(b, hkv, g, d).astype(F32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qr, k.astype(F32)) * (d**-0.5)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, v.astype(F32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def ssd_ref(
+    x: Array,  # [B, S, H, P]
+    dt: Array,  # [B, S, H] positive
+    a: Array,  # [H] negative
+    b: Array,  # [B, S, G, N]
+    c: Array,  # [B, S, G, N]
+    h0: Optional[Array] = None,  # [B, H, P, N]
+) -> tuple[Array, Array]:
+    """Sequential SSD recurrence (the definitional oracle).
+
+    h_t = exp(a*dt_t) h_{t-1} + dt_t * x_t B_t^T ;  y_t = h_t C_t
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b.astype(F32), rep, axis=2)  # [B,S,H,N]
+    ch = jnp.repeat(c.astype(F32), rep, axis=2)
+    xf, dtf = x.astype(F32), dt.astype(F32)
+
+    def step(hprev, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P],[B,H],[B,H,N],[B,H,N]
+        decay = jnp.exp(dtt * a[None, :])[..., None, None]
+        upd = (dtt[..., None] * xt)[..., None] * bt[:, :, None, :]
+        hnew = hprev * decay + upd
+        y = jnp.einsum("bhpn,bhn->bhp", hnew, ct)
+        return hnew, y
+
+    init = jnp.zeros((bsz, h, p, n), F32) if h0 is None else h0.astype(F32)
+    final, ys = jax.lax.scan(
+        step,
+        init,
+        (
+            xf.swapaxes(0, 1),
+            dtf.swapaxes(0, 1),
+            bh.swapaxes(0, 1),
+            ch.swapaxes(0, 1),
+        ),
+    )
+    return ys.swapaxes(0, 1).astype(x.dtype), final

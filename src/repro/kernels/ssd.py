@@ -1,0 +1,144 @@
+"""Mamba2 SSD chunk scan (Pallas TPU).
+
+The SSD algorithm's within-chunk work is L x L and L x N matmuls — MXU
+food — while the inter-chunk state hop is a tiny [P, N] recurrence. The XLA
+path (repro.models.ssm.ssd_chunked) materializes the [B, nc, L, L, H] decay
+tensor in HBM; this kernel keeps everything per-(batch, head, chunk) in
+VMEM: decay matrices are built in-register, and the running [P, N] state is
+VMEM scratch carried across the chunk grid dimension (TPU grids iterate the
+minor axis sequentially), so HBM traffic is exactly inputs + outputs.
+
+Grid: (B, H, nc) — chunks minor. Per step the kernel
+  1. computes the within-chunk causal decay kernel from cumsum(dt*a),
+  2. y_intra = ((C B^T) * decay_ij * dt_j) @ x        (MXU, [L,L]@[L,P])
+  3. y_inter = (C @ state^T) * decay_from_chunk_start (MXU, [L,N]@[N,P])
+  4. state   = decay_total * state + (B * tail-decay * dt)^T @ x
+
+Layouts: x [B,H,nc,L,P], dt [B,H,nc,L(,1)], B/C [B,G,nc,L,N] indexed at
+g = h // (H/G) so grouped B/C are never expanded H-wide in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, st_ref, state_s):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+    l, p = x_ref.shape
+    n = b_ref.shape[-1]
+
+    @pl.when(ci == 0)
+    def _init():
+        state_s[...] = jnp.zeros_like(state_s)
+
+    a = a_ref[0, 0]  # scalar decay rate for this head
+    x = x_ref[...].astype(F32)  # [L, P]
+    dt = dt_ref[...].astype(F32)  # [L, 1]
+    bm = b_ref[...].astype(F32)  # [L, N]
+    cm = c_ref[...].astype(F32)  # [L, N]
+
+    da = dt * a  # [L, 1] log-decay per step
+    cum = jnp.cumsum(da, axis=0)  # [L, 1]
+
+    # within-chunk: att[i,j] = exp(cum_i - cum_j) * (C_i . B_j) * dt_j, i>=j
+    seg = cum - cum.reshape(1, l)  # [L, L] = cum_i - cum_j
+    iot = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jot = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    causal = iot >= jot
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=F32
+    )  # [L, L] C_i . B_j
+    att = cb * decay * dt.reshape(1, l)
+    y = jax.lax.dot_general(
+        att, x, (((1,), (0,)), ((), ())), preferred_element_type=F32
+    )  # [L, P]
+
+    # inter-chunk: y += (C decayed-to-i) @ state_in^T   (state [P, N])
+    state = state_s[...]
+    y = y + jax.lax.dot_general(
+        cm * jnp.exp(cum), state, (((1,), (1,)), ((), ())),
+        preferred_element_type=F32,
+    )
+
+    # state update: state' = exp(sum da) * state + x^T @ (B * tail * dt)
+    total = jnp.sum(da)
+    tail = jnp.exp(total - cum)  # [L, 1] decay from step j to chunk end
+    bw = bm * (tail * dt)  # [L, N]
+    state_s[...] = state * jnp.exp(total) + jax.lax.dot_general(
+        x, bw, (((0,), (0,)), ((), ())), preferred_element_type=F32
+    )  # [P, N]
+
+    y_ref[...] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        st_ref[...] = state_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H] positive
+    a: jax.Array,  # [H] negative
+    b: jax.Array,  # [B, S, G, N]
+    c: jax.Array,  # [B, S, G, N]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """-> (y [B,S,H,P], final_state [B,H,P,N] f32)."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    if pad:  # dt=0 pad steps are exact no-ops (see models.ssm)
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, b, c = zpad(x), zpad(dt), zpad(b), zpad(c)
+    sp = s + pad
+    nc = sp // chunk
+
+    xr = x.transpose(0, 2, 1, 3).reshape(bsz, h, nc, chunk, p)
+    dtr = dt.transpose(0, 2, 1).reshape(bsz, h, nc, chunk, 1)
+    br = b.transpose(0, 2, 1, 3).reshape(bsz, g, nc, chunk, n)
+    cr = c.transpose(0, 2, 1, 3).reshape(bsz, g, nc, chunk, n)
+    ar = a.reshape(h, 1).astype(F32)
+
+    y, st = pl.pallas_call(
+        _ssd_kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, ci: (j, 0)),
+            pl.BlockSpec((None, None, None, chunk, p), lambda i, j, ci: (i, j, ci, 0, 0)),
+            pl.BlockSpec((None, None, None, chunk, 1), lambda i, j, ci: (i, j, ci, 0, 0)),
+            pl.BlockSpec(
+                (None, None, None, chunk, n),
+                lambda i, j, ci, rep=rep: (i, j // rep, ci, 0, 0),
+            ),
+            pl.BlockSpec(
+                (None, None, None, chunk, n),
+                lambda i, j, ci, rep=rep: (i, j // rep, ci, 0, 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, None, chunk, p), lambda i, j, ci: (i, j, ci, 0, 0)),
+            pl.BlockSpec((None, None, p, n), lambda i, j, ci: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, nc, chunk, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), F32)],
+        interpret=interpret,
+    )(ar, xr, dtr, br, cr)
+    y = y.reshape(bsz, h, sp, p).transpose(0, 2, 1, 3)[:, :s]
+    return y, st

@@ -1,0 +1,163 @@
+"""Fused per-token cross-entropy over a blocked vocabulary (Pallas TPU).
+
+The OBFTF selection forward needs per-example losses from EVERY forward pass
+at vocab sizes up to 152k. Materializing log-softmax of [tokens, V] logits is
+the dominant HBM traffic of that pass; this kernel streams vocab blocks
+through VMEM with an online logsumexp (flash-style reduction) and emits only
+[T] losses + [T] LSEs. The backward kernel recomputes softmax from
+(logits, lse) blockwise — nothing of size [T, V] beyond the logits
+themselves ever hits HBM.
+
+Grid: (T/bt, V/bv), vocab minor — TPU grids iterate the last axis fastest
+and sequentially, so the running (max, sumexp, picked-logit) state lives in
+VMEM scratch across vocab steps of one token block.
+
+Tiling: bt x bv blocks, bt multiple of 8 (sublane), bv multiple of 128
+(lane). f32 accumulation throughout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _fwd_kernel(labels_ref, logits_ref, loss_ref, lse_ref, m_s, s_s, p_s):
+    vi = pl.program_id(1)
+    nv = pl.num_programs(1)
+    bt, bv = logits_ref.shape
+
+    @pl.when(vi == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        s_s[...] = jnp.zeros_like(s_s)
+        p_s[...] = jnp.zeros_like(p_s)
+
+    block = logits_ref[...].astype(F32)  # [bt, bv]
+    m_prev, s_prev = m_s[...], s_s[...]  # [bt, 1]
+    bm = jnp.max(block, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, bm)
+    s_new = s_prev * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(block - m_new), axis=-1, keepdims=True
+    )
+
+    # pick the label logit if it falls inside this vocab block
+    col = labels_ref[...] - vi * bv  # [bt, 1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bt, bv), 1)
+    hit = iota == col  # [bt, bv]
+    picked = jnp.sum(jnp.where(hit, block, 0.0), axis=-1, keepdims=True)
+    p_s[...] = p_s[...] + picked
+    m_s[...] = m_new
+    s_s[...] = s_new
+
+    @pl.when(vi == nv - 1)
+    def _emit():
+        lse = m_new + jnp.log(s_new)
+        lse_ref[...] = lse
+        loss_ref[...] = lse - p_s[...]
+
+
+def _bwd_kernel(labels_ref, g_ref, logits_ref, lse_ref, grad_ref):
+    vi = pl.program_id(1)
+    bt, bv = logits_ref.shape
+    block = logits_ref[...].astype(F32)
+    p = jnp.exp(block - lse_ref[...])  # [bt, bv]; lse [bt, 1]
+    col = labels_ref[...] - vi * bv
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bt, bv), 1)
+    onehot = (iota == col).astype(F32)
+    grad_ref[...] = ((p - onehot) * g_ref[...]).astype(grad_ref.dtype)
+
+
+def _pad_to(x, mult, axis, value):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bv", "interpret"))
+def xent_fwd(
+    logits: jax.Array,
+    labels: jax.Array,
+    *,
+    bt: int = 256,
+    bv: int = 2048,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """logits [T,V], labels [T] -> (loss [T] f32, lse [T] f32)."""
+    t, v = logits.shape
+    bt = min(bt, max(8, -(-t // 8) * 8))
+    bv = min(bv, max(128, -(-v // 128) * 128))
+    lp = _pad_to(_pad_to(logits, bt, 0, 0.0), bv, 1, NEG_INF)
+    lab = _pad_to(labels.astype(jnp.int32), bt, 0, 0)[:, None]  # [Tp, 1]
+    tp, vp = lp.shape
+    grid = (tp // bt, vp // bv)
+    loss, lse = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, 1), F32),
+            jax.ShapeDtypeStruct((tp, 1), F32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt, 1), F32),
+            pltpu.VMEM((bt, 1), F32),
+            pltpu.VMEM((bt, 1), F32),
+        ],
+        interpret=interpret,
+    )(lab, lp)
+    return loss[:t, 0], lse[:t, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bv", "interpret"))
+def xent_bwd(
+    logits: jax.Array,
+    labels: jax.Array,
+    lse: jax.Array,
+    g: jax.Array,
+    *,
+    bt: int = 256,
+    bv: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    """-> d(sum(g * loss))/d logits, [T,V] in logits.dtype."""
+    t, v = logits.shape
+    bt = min(bt, max(8, -(-t // 8) * 8))
+    bv = min(bv, max(128, -(-v // 128) * 128))
+    lp = _pad_to(_pad_to(logits, bt, 0, 0.0), bv, 1, NEG_INF)
+    lab = _pad_to(labels.astype(jnp.int32), bt, 0, -1)[:, None]
+    lsep = _pad_to(lse.astype(F32), bt, 0, 0.0)[:, None]
+    gp = _pad_to(g.astype(F32), bt, 0, 0.0)[:, None]
+    tp, vp = lp.shape
+    grid = (tp // bt, vp // bv)
+    grad = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((tp, vp), logits.dtype),
+        interpret=interpret,
+    )(lab, gp, lp, lsep)
+    return grad[:t, :v]

@@ -1,0 +1,298 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The dry-run is the ONLY entry point that fakes 512 host devices.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions every op; no
+    mismatched-sharding or unsupported-collective errors),
+  * the per-device memory fits (compiled.memory_analysis()),
+  * and extracts the roofline terms (FLOPs / HBM bytes / collective wire
+    bytes, trip-count aware) from the partitioned HLO.
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json; the
+benchmark harness and EXPERIMENTS.md tables read from there.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.configs.shapes import SHAPES, runnable, skip_reason
+from repro.core.obftf import OBFTFConfig
+from repro.core.selection import SelectionConfig
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh, production_rules
+from repro.launch.specs import make_cell
+from repro.models.config import count_active_params, count_params
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+V5E = dict(chip_flops=197e12, hbm_bw=819e9, ici_bw=50e9, dcn_bw=6.25e9)
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    mesh_kind: str,
+    *,
+    sel_method: str = "obftf",
+    sel_ratio: float = 0.25,
+    seq_parallel: bool = True,
+    strategy: str = "baseline",  # baseline (TP+SP) | fsdp | fsdp_cp[_int8]
+    recycle: bool = False,
+    moe_group: int = 0,
+    blocked_attn: int = 0,
+    kv_int8: bool = False,
+    out_dir: str = OUT_DIR,
+    tag: str = "",
+) -> dict:
+    cfg = configs.get(arch)
+    if moe_group:
+        cfg = dataclasses.replace(cfg, moe_group=moe_group)
+    if blocked_attn:
+        cfg = dataclasses.replace(cfg, blocked_attn_min=blocked_attn)
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    cell = SHAPES[shape]
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    shard_local = True
+    if strategy in ("fsdp_cp", "fsdp_cp_int8"):
+        # FSDP params over both axes + batch over data + SEQUENCE over
+        # model (context parallelism). Selection stays shard-local (16
+        # seqs/data-shard) and the backward subset stays fully sharded —
+        # fixing the replicated-backward pathology of pure "fsdp".
+        from repro.distributed.sharding import FSDP_RULES
+
+        rules = dataclasses.replace(
+            FSDP_RULES,
+            batch_axes=("pod", "data") if multi else ("data",),
+            seq_axis="model",
+            int8_gather=(strategy == "fsdp_cp_int8"),
+        )
+    elif strategy.startswith("fsdp"):
+        from repro.distributed.sharding import FSDP_RULES
+
+        rules = FSDP_RULES
+        if multi:
+            rules = dataclasses.replace(
+                rules, batch_axes=("pod", "data", "model")
+            )
+        shard_local = False  # 1 seq/device: select over the global batch
+    else:
+        rules = production_rules(multi_pod=multi)
+        if seq_parallel:
+            rules = dataclasses.replace(rules, seq_axis=rules.model_axis)
+        if strategy == "ulysses":
+            rules = dataclasses.replace(rules, ulysses=True)
+    n_dev = mesh.devices.size
+
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "mesh_shape": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "kind": cell.kind,
+        "devices": int(n_dev),
+        "tag": tag,
+        "ok": False,
+    }
+    if not runnable(cfg, shape):
+        rec["skipped"] = skip_reason(cfg, shape)
+        _write(rec, out_dir, tag)
+        return rec
+
+    obftf = OBFTFConfig(
+        selection=SelectionConfig(method=sel_method, ratio=sel_ratio),
+        shard_local=shard_local,
+        recycle_forward=recycle,
+    )
+    rec["strategy"] = strategy
+    t0 = time.time()
+    try:
+        from repro.distributed.sharding import use_rules
+
+        lc = make_cell(cfg, cell, mesh, rules, obftf)
+        with use_rules(mesh, rules):
+            jitted = jax.jit(
+                lc.fn,
+                out_shardings=lc.out_shardings,
+                donate_argnums=lc.donate_argnums,
+            )
+            lowered = jitted.lower(*lc.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()  # per-device (verified empirically)
+        rec["memory"] = {
+            "argument_bytes_per_device": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes_per_device": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+        rec["memory"]["total_bytes_per_device"] = (
+            rec["memory"]["argument_bytes_per_device"]
+            + rec["memory"]["temp_bytes_per_device"]
+            + rec["memory"]["code_bytes"]
+        )
+        # the CPU backend upcasts bf16 params/caches to f32 working copies;
+        # a TPU compile keeps bf16 — subtract the legalization artifact.
+        hlo_text = compiled.as_text()
+        up = H.upcast_bytes(hlo_text)
+        rec["memory"]["cpu_bf16_upcast_bytes"] = up
+        rec["memory"]["corrected_total_per_device"] = (
+            rec["memory"]["total_bytes_per_device"] - up
+        )
+        rec["memory"]["fits_16gb_hbm"] = (
+            rec["memory"]["corrected_total_per_device"] < 16e9
+        )
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+
+        dcn_block = 256 if multi else 0
+        costs = H.analyze(hlo_text, default_group=1, dcn_block=dcn_block)
+        ici = sum(v["bytes"] for k, v in costs.coll.items() if "@dcn" not in k)
+        dcn = sum(v["bytes"] for k, v in costs.coll.items() if "@dcn" in k)
+        rec["analysis"] = {
+            "flops_per_device": costs.flops,
+            "hbm_bytes_per_device": costs.hbm_bytes,
+            "collectives": costs.coll,
+            "ici_bytes": ici,
+            "dcn_bytes": dcn,
+        }
+        rec["roofline"] = {
+            "t_compute_s": costs.flops / V5E["chip_flops"],
+            "t_memory_s": costs.hbm_bytes / V5E["hbm_bw"],
+            "t_ici_s": ici / V5E["ici_bw"],
+            "t_dcn_s": dcn / V5E["dcn_bw"],
+        }
+        rec["roofline"]["t_collective_s"] = (
+            rec["roofline"]["t_ici_s"] + rec["roofline"]["t_dcn_s"]
+        )
+        dom = max(
+            ("t_compute_s", "t_memory_s", "t_collective_s"),
+            key=lambda k: rec["roofline"][k],
+        )
+        rec["roofline"]["dominant"] = dom
+
+        n_params = count_params(cfg)
+        n_active = count_active_params(cfg)
+        rec["params"] = {"total": n_params, "active": n_active}
+        if cell.kind == "train":
+            tokens = cell.global_batch * (cell.seq_len - cfg.prefix_len)
+            # fwd-all (2ND) + bwd on the selected subset (4ND * ratio)
+            useful = 2 * n_active * tokens * (1 + 2 * sel_ratio)
+        elif cell.kind == "prefill":
+            tokens = cell.global_batch * (cell.seq_len - cfg.prefix_len)
+            useful = 2 * n_active * tokens
+        else:  # decode: one token per sequence
+            useful = 2 * n_active * cell.global_batch
+        rec["model_flops"] = {
+            "useful_total": useful,
+            "useful_per_device": useful / n_dev,
+            "ratio_useful_over_hlo": (
+                useful / n_dev / costs.flops if costs.flops else 0.0
+            ),
+        }
+        rec["timing"] = {"lower_s": t_lower, "compile_s": t_compile}
+        rec["ok"] = True
+    except Exception as e:  # a failure here is a sharding bug: record it
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    _write(rec, out_dir, tag)
+    return rec
+
+
+def _write(rec: dict, out_dir: str, tag: str = "") -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--sel-method", default="obftf")
+    ap.add_argument("--sel-ratio", type=float, default=0.25)
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--strategy", default="baseline")
+    ap.add_argument("--recycle", action="store_true")
+    ap.add_argument("--moe-group", type=int, default=0)
+    ap.add_argument("--blocked-attn", type=int, default=0)
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = list(configs.ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                t0 = time.time()
+                rec = run_cell(
+                    arch,
+                    shape,
+                    mesh_kind,
+                    sel_method=args.sel_method,
+                    sel_ratio=args.sel_ratio,
+                    seq_parallel=not args.no_seq_parallel,
+                    strategy=args.strategy,
+                    recycle=args.recycle,
+                    moe_group=args.moe_group,
+                    blocked_attn=args.blocked_attn,
+                    kv_int8=args.kv_int8,
+                    out_dir=args.out,
+                    tag=args.tag,
+                )
+                dt = time.time() - t0
+                if rec.get("skipped"):
+                    n_skip += 1
+                    print(f"SKIP {arch:18s} {shape:12s} {mesh_kind}: {rec['skipped']}")
+                elif rec["ok"]:
+                    n_ok += 1
+                    r = rec["roofline"]
+                    mem_gb = rec["memory"]["corrected_total_per_device"] / 1e9
+                    print(
+                        f"OK   {arch:18s} {shape:12s} {mesh_kind:6s} "
+                        f"{dt:6.1f}s mem/dev={mem_gb:6.2f}GB "
+                        f"tc={r['t_compute_s']:.2e} tm={r['t_memory_s']:.2e} "
+                        f"tx={r['t_collective_s']:.2e} dom={r['dominant']}"
+                    )
+                else:
+                    n_fail += 1
+                    print(f"FAIL {arch:18s} {shape:12s} {mesh_kind}: {rec['error']}")
+    print(f"\n{n_ok} ok / {n_fail} failed / {n_skip} skipped")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,439 @@
+"""Static analysis of compiled (post-SPMD) HLO: FLOPs, HBM bytes, and
+collective wire bytes — trip-count aware.
+
+Why not `compiled.cost_analysis()`: XLA's analysis visits each `while` body
+ONCE, but every model here scans over layers, so an L-layer model would be
+undercounted by ~L x (verified empirically; see tests). This analyzer
+parses `compiled.as_text()`, resolves operand shapes through a per-
+computation symbol table, multiplies `while` bodies by their trip count
+(recovered from the loop-condition constant — exact for scan-lowered
+loops), and recurses through call/fusion/conditional.
+
+Per-device accounting on the partitioned module:
+  flops            — 2*M*N*K for dot (+ elementwise approx), the MXU term
+  hbm_bytes        — sum over top-level ops of result+operand bytes
+                     (fusion interiors excluded: fused values never
+                     materialize in HBM)
+  collective bytes — ring-model wire bytes per device:
+                       all-reduce        2*X*(P-1)/P
+                       all-gather        R*(P-1)/P      (R = result bytes)
+                       reduce-scatter    X*(P-1)/P
+                       all-to-all        X*(P-1)/P
+                       collective-permute X
+                     split into ici_bytes vs dcn_bytes by whether the
+                     replica group spans the pod axis (group size > chips
+                     within the partition of the fastest-varying axes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+    "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result types may be long tuples containing `/*index=N*/` annotations, so
+# the type group is lazy `.*?` anchored on the first `word(` = the opcode.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$"
+)
+# computation headers sit at column 0: `%name (args) -> ret {` (args may
+# nest parens for tuple types, so just anchor on name + `->` + trailing `{`)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    """'(f32[2,3]{1,0}, bf16[4])' or 'f32[2,3]' -> [(dtype, shape), ...]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    return sum(
+        _DTYPE_BYTES[dt] * math.prod(shape) if shape else _DTYPE_BYTES[dt]
+        for dt, shape in _parse_shapes(type_str)
+    )
+
+
+def _group_info(
+    attrs: str, default: int, dcn_block: int = 0
+) -> tuple[int, bool]:
+    """(group size, crosses DCN) for a collective's replica groups.
+
+    `dcn_block`: devices per pod (e.g. 256); a group "crosses DCN" if it
+    contains ids from more than one pod. Handles both the explicit
+    `{{0,1},{2,3}}` format and the iota format
+    `[G,S]<=[d0,d1,...]T(p...)` (simulated exactly).
+    """
+    m = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", attrs
+    )
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        perm = (
+            [int(p) for p in m.group(4).split(",")]
+            if m.group(4)
+            else list(range(len(dims)))
+        )
+        if dcn_block <= 0:
+            return s, False
+        import numpy as np
+
+        ids = np.arange(math.prod(dims)).reshape(dims).transpose(perm)
+        groups = ids.reshape(g, s) // dcn_block
+        crosses = bool((groups.max(axis=1) - groups.min(axis=1)).max() > 0)
+        return s, crosses
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2)), False
+    m = re.search(r"replica_groups=\{(\{[^=]*?\})\}", attrs)
+    if m:
+        first = re.match(r"\{([^}]*)\}", m.group(1))
+        ids = [int(x) for x in first.group(1).split(",") if x.strip() != ""]
+        crosses = (
+            dcn_block > 0
+            and len(ids) > 0
+            and (max(ids) // dcn_block) != (min(ids) // dcn_block)
+        )
+        return max(1, len(ids)), crosses
+    return default, False
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str  # operands + attributes
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    symtab: dict[str, str]  # op name -> result type string
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.coll.items():
+            e = self.coll.setdefault(k, {"bytes": 0.0, "count": 0.0})
+            e["bytes"] += v["bytes"] * mult
+            e["count"] += v["count"] * mult
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.coll.values())
+
+
+COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def parse_module(hlo: str) -> tuple[dict[str, Computation], Optional[str]]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            if line[:1].isspace():
+                continue
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line.strip().startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(2).strip(), m.group(3), m.group(4))
+            cur.ops.append(op)
+            cur.symtab[op.name] = op.result_type
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+_CALLED_RE = re.compile(
+    r"(?:to_apply|calls|condition|body|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?"
+)
+
+
+def _called_comps(rest: str) -> dict[str, str]:
+    """{'condition': name, 'body': name} / {'calls': name} etc."""
+    out = {}
+    for key in ("condition", "body", "to_apply", "calls"):
+        m = re.search(rf"{key}=%?([\w.\-]+)", rest)
+        if m:
+            out[key] = m.group(1)
+    m = re.search(r"branch_computations=\{([^}]*)\}", rest)
+    if m:
+        out["branches"] = [
+            s.strip().lstrip("%") for s in m.group(1).split(",")
+        ]
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Scan-lowered loops compare the induction var against a constant."""
+    consts = []
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + op.rest)
+            if m:
+                consts.append(int(m.group(1)))
+    pos = [c for c in consts if c > 0]
+    return max(pos) if pos else 1
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Operand names from 'op(%a, %b.1, ...), attr=...' (args before ')')."""
+    depth, end = 0, len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    args = rest[:end]
+    return re.findall(r"%?([\w.\-]+)", args)
+
+
+def _dot_flops(op: Op, symtab: dict[str, str]) -> float:
+    result = _parse_shapes(op.result_type)
+    if not result:
+        return 0.0
+    _, rshape = result[0]
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    names = _operand_names(op.rest)
+    if not m or not names:
+        return 2.0 * math.prod(rshape)
+    lhs_type = symtab.get(names[0])
+    if lhs_type is None:
+        return 2.0 * math.prod(rshape)
+    lshapes = _parse_shapes(lhs_type)
+    if not lshapes:
+        return 2.0 * math.prod(rshape)
+    _, lshape = lshapes[0]
+    k = 1
+    for d in m.group(1).split(","):
+        if d.strip() != "" and int(d) < len(lshape):
+            k *= lshape[int(d)]
+    return 2.0 * math.prod(rshape) * k
+
+
+# opcodes whose operands/results are real HBM traffic at the top level
+_SKIP_TRAFFIC = {
+    "parameter",
+    "constant",
+    "get-tuple-element",
+    "tuple",
+    "bitcast",
+    "while",
+    "call",
+    "conditional",
+    "after-all",
+    "custom-call",
+}
+
+
+def _comp_costs(
+    comp: Computation,
+    comps: dict[str, Computation],
+    default_group: int,
+    memo: dict[str, Costs],
+    dcn_block: int = 0,
+) -> Costs:
+    if comp.name in memo:
+        return memo[comp.name]
+    c = Costs()
+    for op in comp.ops:
+        base = op.opcode.replace("-start", "")
+        if base in COLLECTIVES:
+            p, crosses = _group_info(op.rest, default_group, dcn_block)
+            names = _operand_names(op.rest)
+            opbytes = sum(_nbytes(comp.symtab.get(n, "")) for n in names)
+            rbytes = _nbytes(op.result_type)
+            if base == "all-reduce":
+                wire = 2.0 * opbytes * (p - 1) / max(p, 1)
+            elif base == "all-gather":
+                wire = rbytes * (p - 1) / max(p, 1)
+            elif base in ("reduce-scatter", "all-to-all"):
+                wire = opbytes * (p - 1) / max(p, 1)
+            else:  # collective-permute
+                wire = opbytes
+            key = base + ("@dcn" if crosses else "")
+            e = c.coll.setdefault(key, {"bytes": 0.0, "count": 0.0})
+            e["bytes"] += wire
+            e["count"] += 1
+            c.hbm_bytes += opbytes + rbytes
+            continue
+        if op.opcode == "while":
+            called = _called_comps(op.rest)
+            body = comps.get(called.get("body", ""))
+            cond = comps.get(called.get("condition", ""))
+            trips = _trip_count(cond) if cond else 1
+            if body:
+                c.add(_comp_costs(body, comps, default_group, memo, dcn_block), trips)
+            if cond:
+                c.add(_comp_costs(cond, comps, default_group, memo, dcn_block), trips)
+            continue
+        if op.opcode in ("call", "custom-call"):
+            called = _called_comps(op.rest)
+            tgt = comps.get(called.get("to_apply", called.get("calls", "")))
+            if tgt:
+                c.add(_comp_costs(tgt, comps, default_group, memo, dcn_block))
+            continue
+        if op.opcode == "conditional":
+            called = _called_comps(op.rest)
+            branch_costs = [
+                _comp_costs(comps[b], comps, default_group, memo, dcn_block)
+                for b in called.get("branches", [])
+                if b in comps
+            ]
+            if branch_costs:
+                worst = max(branch_costs, key=lambda x: x.flops + x.hbm_bytes)
+                c.add(worst)
+            continue
+        if op.opcode == "fusion":
+            called = _called_comps(op.rest)
+            tgt = comps.get(called.get("calls", ""))
+            if tgt:  # FLOPs from inside; traffic = fusion boundary only
+                inner = _comp_costs(tgt, comps, default_group, memo, dcn_block)
+                c.flops += inner.flops
+            names = _operand_names(op.rest)
+            c.hbm_bytes += _nbytes(op.result_type) + sum(
+                _nbytes(comp.symtab.get(n, "")) for n in names
+            )
+            continue
+        if op.opcode == "dot":
+            c.flops += _dot_flops(op, comp.symtab)
+            names = _operand_names(op.rest)
+            c.hbm_bytes += _nbytes(op.result_type) + sum(
+                _nbytes(comp.symtab.get(n, "")) for n in names
+            )
+            continue
+        if op.opcode in _SKIP_TRAFFIC or op.opcode.endswith("-done"):
+            continue
+        # generic op: elementwise-ish
+        rbytes = _nbytes(op.result_type)
+        names = _operand_names(op.rest)
+        c.flops += sum(math.prod(s) for _, s in _parse_shapes(op.result_type))
+        c.hbm_bytes += rbytes + sum(
+            _nbytes(comp.symtab.get(n, "")) for n in names
+        )
+    memo[comp.name] = c
+    return c
+
+
+def analyze(hlo: str, default_group: int = 1, dcn_block: int = 0) -> Costs:
+    """Per-device costs of one execution of the compiled module.
+
+    `dcn_block`: devices per pod; collectives whose replica groups span
+    pods are tagged `<kind>@dcn` in `coll`."""
+    comps, entry = parse_module(hlo)
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda k: len(comps[k].ops)) if comps else None
+    if entry is None:
+        return Costs()
+    # fusion computations are reached via 'calls='; everything else from entry
+    return _comp_costs(comps[entry], comps, default_group, {}, dcn_block)
+
+
+def upcast_bytes(hlo: str) -> float:
+    """Bytes of CPU-backend bf16->f32 legalization copies (entry-level).
+
+    The CPU backend has no native bf16: it inserts f32 working copies of
+    bf16 parameters/caches at entry (`wrapped_convert` fusions). A real TPU
+    compile keeps bf16 end-to-end, so the dry-run's memory_analysis
+    overstates by exactly these copies; callers subtract this to get the
+    TPU-comparable figure (recorded as `corrected_total` in the dry-run).
+    """
+    comps, entry = parse_module(hlo)
+    if entry is None:
+        return 0.0
+    comp = comps[entry]
+    total = 0.0
+    for op in comp.ops:
+        if op.opcode not in ("convert", "fusion"):
+            continue
+        shapes = _parse_shapes(op.result_type)
+        if len(shapes) != 1 or shapes[0][0] != "f32":
+            continue
+        names = _operand_names(op.rest)
+        if len(names) < 1:
+            continue
+        src = comp.symtab.get(names[0], "")
+        sshapes = _parse_shapes(src)
+        if (
+            len(sshapes) == 1
+            and sshapes[0][0] == "bf16"
+            and sshapes[0][1] == shapes[0][1]
+            and ("param" in names[0] or "convert" in op.name)
+        ):
+            total += _nbytes(op.result_type)
+    return total
+
+
+def roofline_terms(
+    costs: Costs,
+    *,
+    chips_flops: float = 197e12,  # bf16 peak / chip (v5e)
+    hbm_bw: float = 819e9,  # bytes/s / chip
+    ici_bw: float = 50e9,  # bytes/s / link
+) -> dict[str, float]:
+    """Three roofline times (seconds) for the per-device costs."""
+    return {
+        "t_compute": costs.flops / chips_flops,
+        "t_memory": costs.hbm_bytes / hbm_bw,
+        "t_collective": costs.collective_bytes / ici_bw,
+    }

@@ -1,0 +1,313 @@
+"""Abstract input specs + step builders for every (arch x shape x mesh) cell.
+
+Everything here is ShapeDtypeStruct-based (the shannon/kernels pattern):
+weak-type-correct, sharding-annotated, zero device allocation — the
+multi-pod dry-run lowers train/prefill/serve steps for 236B-parameter
+configs on a CPU host this way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.obftf import OBFTFConfig, make_train_step
+from repro.core.selection import SelectionConfig
+from repro.distributed.sharding import AxisRules, param_partition_specs, rules_for
+from repro.distributed.zero import zero1_partition_specs
+from repro.configs.shapes import ShapeCell
+from repro.models import model as Mdl
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec, abstract, is_spec
+from repro.optim import AdamWConfig, adamw, warmup_cosine
+
+KEY_T = jax.eval_shape(lambda: jax.random.key(0))
+
+
+def _sds(shape, dtype, mesh: Optional[Mesh], spec: Optional[P]):
+    if mesh is None or spec is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, spec)
+    )
+
+
+def _filtered(spec_parts, shape, mesh: Optional[Mesh]):
+    """Drop mesh axes that don't divide the dim (replicate instead)."""
+    if mesh is None:
+        return P(*([None] * len(shape)))
+    parts = []
+    for dim, axes in zip(shape, spec_parts):
+        if axes is None:
+            parts.append(None)
+            continue
+        flat = (axes,) if isinstance(axes, str) else tuple(axes)
+        size = 1
+        for a in flat:
+            size *= mesh.shape[a]
+        parts.append(axes if dim % size == 0 else None)
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# state (params + optimizer) specs
+# ---------------------------------------------------------------------------
+
+
+def state_specs(
+    cfg: ModelConfig,
+    mesh: Optional[Mesh],
+    rules: AxisRules,
+    lr: float = 3e-4,
+    total_steps: int = 100_000,
+):
+    """(abstract_state, state_shardings, optimizer) for the train step."""
+    pspecs = Mdl.param_specs(cfg)
+    param_parts = param_partition_specs(pspecs, rules, mesh)
+    opt_parts = (
+        zero1_partition_specs(pspecs, rules, mesh)
+        if mesh is not None
+        else jax.tree.map(lambda s: P(), pspecs, is_leaf=is_spec)
+    )
+
+    def shard(parts):
+        if mesh is None:
+            return jax.tree.map(lambda s: None, parts)
+        return jax.tree.map(lambda sp: NamedSharding(mesh, sp), parts)
+
+    param_sh = shard(param_parts)
+    opt_sh = shard(opt_parts)
+    params_abs = abstract(pspecs, jnp.dtype(cfg.param_dtype), param_sh)
+    moments_abs = abstract(pspecs, jnp.float32, opt_sh)
+    scalar = _sds((), jnp.int32, mesh, P())
+    state_abs = {
+        "params": params_abs,
+        "opt": {"step": scalar, "m": moments_abs, "v": moments_abs},
+        "step": scalar,
+    }
+    state_sh = {
+        "params": param_sh,
+        "opt": {
+            "step": None if mesh is None else NamedSharding(mesh, P()),
+            "m": opt_sh,
+            "v": opt_sh,
+        },
+        "step": None if mesh is None else NamedSharding(mesh, P()),
+    }
+    warmup = min(2000, max(1, total_steps // 10))
+    optimizer = adamw(
+        warmup_cosine(lr, warmup, total_steps), AdamWConfig(weight_decay=0.1)
+    )
+    return state_abs, state_sh, optimizer
+
+
+# ---------------------------------------------------------------------------
+# batch specs per shape cell
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(
+    cfg: ModelConfig, cell: ShapeCell, mesh: Optional[Mesh], rules: AxisRules
+) -> dict[str, jax.ShapeDtypeStruct]:
+    """Train/prefill batch: {tokens, labels[, prefix_embed]}."""
+    b = cell.global_batch
+    tok_len = cell.seq_len - cfg.prefix_len
+    dp = rules.batch_axes
+    bspec = _filtered((dp, None), (b, tok_len), mesh)
+    out = {
+        "tokens": _sds((b, tok_len), jnp.int32, mesh, bspec),
+        "labels": _sds((b, tok_len), jnp.int32, mesh, bspec),
+    }
+    if cfg.frontend:
+        pspec = _filtered((dp, None, None), (b, cfg.prefix_len, cfg.d_model), mesh)
+        out["prefix_embed"] = _sds(
+            (b, cfg.prefix_len, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype),
+            mesh,
+            pspec,
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode cache specs
+# ---------------------------------------------------------------------------
+
+
+def cache_partition_specs(
+    cfg: ModelConfig, cache_abs: Any, mesh: Optional[Mesh], rules: AxisRules
+) -> Any:
+    """PartitionSpec tree for a decode cache (path-keyed placement rules).
+
+    KV/latent caches shard batch over DP and the *sequence* dim over the
+    model axis (decode context parallelism: flash-decode partial softmax
+    + GSPMD all-reduce); SSM states shard heads over model.
+    """
+    dp, mdl = rules.batch_axes, rules.model_axis
+
+    def leaf(path, sds):
+        name = str(getattr(path[-1], "key", ""))
+        nd = len(sds.shape)
+        if name in ("k", "v"):  # [..., B, T, kv, hd]
+            lead = nd - 4
+            parts = [None] * lead + [dp, mdl, None, None]
+        elif name in ("k_scale", "v_scale"):  # [..., B, T, kv]
+            lead = nd - 3
+            parts = [None] * lead + [dp, mdl, None]
+        elif name in ("ckv", "kpe"):  # [..., B, T, R]
+            lead = nd - 3
+            parts = [None] * lead + [dp, mdl, None]
+        elif name == "state":  # [..., B, H, P, N]
+            lead = nd - 4
+            parts = [None] * lead + [dp, mdl, None, None]
+        elif name == "conv":  # [..., B, K-1, C]
+            lead = nd - 3
+            parts = [None] * lead + [dp, None, mdl]
+        else:
+            parts = [None] * nd
+        return _filtered(parts, sds.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_abs)
+
+
+def cache_specs(
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    mesh: Optional[Mesh],
+    rules: AxisRules,
+):
+    cache_abs = jax.eval_shape(
+        lambda: Mdl.init_cache(cfg, batch, max_seq)
+    )
+    parts = cache_partition_specs(cfg, cache_abs, mesh, rules)
+    if mesh is None:
+        return cache_abs, None
+    sh = jax.tree.map(lambda sp: NamedSharding(mesh, sp), parts)
+    cache_sds = jax.tree.map(
+        lambda s, sharding: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sharding),
+        cache_abs,
+        sh,
+    )
+    return cache_sds, sh
+
+
+# ---------------------------------------------------------------------------
+# step builders (what the dry-run lowers and the drivers run)
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    mesh: Optional[Mesh],
+    rules: AxisRules,
+    obftf: Optional[OBFTFConfig] = None,
+):
+    """-> (train_step fn, abstract (state, batch-placeholder-free) specs)."""
+    obftf = obftf or OBFTFConfig(selection=SelectionConfig(method="obftf", ratio=0.25))
+    state_abs, state_sh, optimizer = state_specs(cfg, mesh, rules)
+    step = make_train_step(
+        Mdl.loss_fn(cfg),
+        optimizer,
+        obftf,
+        mesh=mesh,
+        dp_axes=rules.batch_axes if mesh is not None else ("data",),
+    )
+    return step, state_abs, state_sh
+
+
+def build_prefill(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, tokens, prefix=None):
+        return Mdl.prefill(params, cfg, tokens, max_seq=max_seq, prefix=prefix)
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        return Mdl.decode_step(params, cfg, cache, tokens, pos)
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class LoweredCell:
+    """Everything the dry-run needs to lower one (arch, shape, mesh) cell."""
+
+    fn: Any  # the jit-able python callable
+    args: tuple  # ShapeDtypeStruct args
+    out_shardings: Any  # or None
+    kind: str
+    donate_argnums: tuple = ()
+
+
+def make_cell(
+    cfg: ModelConfig,
+    cell: ShapeCell,
+    mesh: Optional[Mesh],
+    rules: AxisRules,
+    obftf: Optional[OBFTFConfig] = None,
+) -> LoweredCell:
+    rules = rules_for(cfg, rules)  # per-arch placement overrides
+    if cell.kind == "train":
+        step, state_abs, state_sh = build_train_step(cfg, mesh, rules, obftf)
+        batch = batch_specs(cfg, cell, mesh, rules)
+        if obftf is not None and obftf.recycle_forward:
+            # serving-recorded losses ride along with the batch
+            b = cell.global_batch
+            batch["recorded_loss"] = _sds(
+                (b,), jnp.float32, mesh,
+                _filtered((rules.batch_axes,), (b,), mesh),
+            )
+        return LoweredCell(
+            fn=step,
+            args=(state_abs, batch, KEY_T),
+            out_shardings=(state_sh, None) if mesh is not None else None,
+            kind="train",
+            donate_argnums=(0,),  # old state buffers back the new state
+        )
+    params_abs, param_sh, _ = state_specs(cfg, mesh, rules)
+    params_abs, param_sh = params_abs["params"], param_sh["params"]
+    if cell.kind == "prefill":
+        batch = batch_specs(cfg, cell, mesh, rules)
+        prefix = batch.get("prefix_embed")
+        fn = build_prefill(cfg, max_seq=cell.seq_len)
+        args = (params_abs, batch["tokens"]) + (
+            (prefix,) if prefix is not None else ()
+        )
+        # pin the cache output to the decode-cache layout: without this the
+        # [L, B, T, ...] cache comes back replicated (21+ GB/device at 32k)
+        _, cache_sh = cache_specs(
+            cfg, cell.global_batch, cell.seq_len, mesh, rules
+        )
+        return LoweredCell(
+            fn=fn,
+            args=args,
+            out_shardings=(None, cache_sh) if mesh is not None else None,
+            kind="prefill",
+        )
+    if cell.kind == "decode":
+        cache_sds, cache_sh = cache_specs(
+            cfg, cell.global_batch, cell.seq_len, mesh, rules
+        )
+        dp = rules.batch_axes
+        tokens = _sds(
+            (cell.global_batch, 1),
+            jnp.int32,
+            mesh,
+            _filtered((dp, None), (cell.global_batch, 1), mesh),
+        )
+        pos = _sds((), jnp.int32, mesh, P())
+        fn = build_serve_step(cfg)
+        return LoweredCell(
+            fn=fn,
+            args=(params_abs, cache_sds, tokens, pos),
+            out_shardings=(None, cache_sh) if mesh is not None else None,
+            kind="decode",
+            donate_argnums=(1,),  # in-place KV/state cache update
+        )
+    raise NotImplementedError(cell.kind)

@@ -1,0 +1,17 @@
+from repro.models.config import (  # noqa: F401
+    ModelConfig,
+    count_active_params,
+    count_params,
+)
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward_hidden,
+    init_cache,
+    loss_fn,
+    param_specs,
+    per_example_loss,
+    per_token_loss,
+    prefill,
+    unembed,
+)
+from repro.models.params import abstract, materialize, tree_bytes, tree_size  # noqa: F401

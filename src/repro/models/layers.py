@@ -1,0 +1,484 @@
+"""Transformer layer primitives: norms, RoPE, GQA/MQA/SWA attention, MLA.
+
+Conventions:
+* activations bf16 (cfg.compute_dtype), reductions/softmax/norms in f32;
+* matmuls pass preferred_element_type=f32 where accumulation matters;
+* every attention entry point has train/prefill (full-sequence) and decode
+  (single token + KV cache) forms; caches are per-layer dicts that the model
+  stacks over layers via scan;
+* sliding-window attention uses a rolling cache (slot = pos % window) so the
+  long_500k cell is O(window) memory — the reason Mixtral runs that cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+
+Array = jax.Array
+F32 = jnp.float32
+
+_MASK_VALUE = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: Array, w: Array, eps: float) -> Array:
+    xf = x.astype(F32)
+    rms = jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (xf * rms).astype(x.dtype) * w.astype(x.dtype)
+
+
+def rmsnorm_spec(d: int, axis: Optional[str] = "embed") -> ParamSpec:
+    return ParamSpec((d,), (axis,), init="ones")
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding over the last dim. x [..., S, H, D]; positions [S]."""
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=F32) / d))
+    ang = positions.astype(F32)[..., None] * inv  # [S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads: [S, 1, D/2]
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+
+def causal_mask(
+    q_pos: Array, k_pos: Array, window: Optional[int] = None
+) -> Array:
+    """[..., S_q, S_k] boolean keep-mask: causal, optionally windowed."""
+    keep = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        keep &= k_pos[None, :] > (q_pos[:, None] - window)
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def gqa_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = d**-0.5
+    p = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim"), scale=s),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim"), scale=s),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim"), scale=s),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"), scale=(h * hd) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_spec(hd, "head_dim")
+        p["k_norm"] = rmsnorm_spec(hd, "head_dim")
+    return p
+
+
+def _qkv(x: Array, p: dict, cfg: ModelConfig, positions: Array):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    # context parallelism: explicit full-seq K/V gather (RS backward);
+    # no-op unless the active sharding rules set seq_axis
+    from repro.distributed.sharding import cp_kv_gather
+
+    k = cp_kv_gather(k, 1)
+    v = cp_kv_gather(v, 1)
+    return q, k, v
+
+
+def _gqa_core(q: Array, k: Array, v: Array, keep: Array, n_q_heads: int) -> Array:
+    """q [B,S,Hq,D]; k,v [B,T,Hkv,D]; keep [S,T] or [B,S,T] -> [B,S,Hq,D]."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q = q.reshape(b, s, hkv, g, d)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", q, k, preferred_element_type=F32
+    ) * (d**-0.5)
+    keep_b = keep if keep.ndim == 3 else keep[None]
+    scores = jnp.where(keep_b[:, None, None], scores, _MASK_VALUE)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, hq, d)
+
+
+def _gqa_blocked(
+    q: Array,
+    k: Array,
+    v: Array,
+    positions: Array,
+    window: Optional[int],
+    block: int = 1024,
+) -> Array:
+    """Memory-bounded causal attention: 2-level blocking (Q outer, KV inner)
+    with online softmax. Peak extra memory is one [B, Hkv, G, bq, bk] score
+    tile (f32) + the per-Q-block accumulator — never anything O(S^2) or
+    O(S x bk). This is the XLA-path analogue of a flash kernel; the Pallas
+    kernels target the same math on TPU. Exact up to fp rounding.
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    nb = (s + block - 1) // block
+    pad = nb * block - s
+    if pad:
+        q = jnp.pad(q, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        k = jnp.pad(k, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        kpos = jnp.pad(positions, (0, pad), constant_values=-1)
+        qpos = jnp.pad(positions, (0, pad), constant_values=-1)
+    else:
+        kpos = qpos = positions
+    sp = s + pad
+    qb = q.reshape(b, nb, block, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(b, nb, block, hkv, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nb, block, hkv, dv).transpose(1, 0, 3, 2, 4)
+    pqb = qpos.reshape(nb, block)
+    pkb = kpos.reshape(nb, block)
+    scale = d**-0.5
+
+    def q_block(args):
+        qi, pq = args
+        # qi [B, Hkv, G, bq, D]; inner online-softmax scan over KV blocks
+        def body(carry, blk):
+            m, l, acc = carry
+            kj, vj, pk = blk  # [B,Hkv,bk,D], [B,Hkv,bk,Dv], [bk]
+            s_ij = jnp.einsum(
+                "bkgqd,bktd->bkgqt", qi, kj, preferred_element_type=F32
+            ) * scale
+            keep = (pk[None, :] <= pq[:, None]) & (pk[None, :] >= 0)
+            if window is not None:
+                keep &= pk[None, :] > (pq[:, None] - window)
+            s_ij = jnp.where(keep[None, None, None], s_ij, _MASK_VALUE)
+            m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+            p_ij = jnp.exp(s_ij - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p_ij, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,bktd->bkgqd", p_ij.astype(vj.dtype), vj,
+                preferred_element_type=F32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, block), _MASK_VALUE, F32)
+        l0 = jnp.zeros((b, hkv, g, block), F32)
+        acc0 = jnp.zeros((b, hkv, g, block, dv), F32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kb, vb, pkb))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    out = jax.lax.map(q_block, (qb, pqb))  # [nb, B, Hkv, G, bq, Dv]
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sp, hq, dv)
+    return out[:, :s]
+
+
+# Sequences at or above this length take the blocked (flash-style) path.
+BLOCKED_ATTN_MIN_SEQ = 8192
+
+
+def gqa_attend(
+    x: Array, p: dict, cfg: ModelConfig, positions: Array
+) -> Array:
+    """Training/prefill full-sequence attention. x [B,S,D] -> [B,S,D]."""
+    q, k, v = _qkv(x, p, cfg, positions)
+    if x.shape[1] >= cfg.blocked_attn_min:
+        out = _gqa_blocked(q, k, v, positions, cfg.sliding_window)
+    else:
+        keep = causal_mask(positions, positions, cfg.sliding_window)
+        out = _gqa_core(q, k, v, keep, cfg.num_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def gqa_cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    return min(max_seq, cfg.sliding_window or max_seq)
+
+
+def _kv_quant(x: Array) -> tuple[Array, Array]:
+    """[..., hd] -> (int8 values, f32 scale over the head_dim)."""
+    xf = x.astype(F32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / safe[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequant(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(F32) * scale[..., None].astype(F32)).astype(dtype)
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    t = gqa_cache_len(cfg, max_seq)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (batch, t, kv, hd)
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1], F32),
+            "v_scale": jnp.zeros(shape[:-1], F32),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_fill_cache(
+    x: Array, p: dict, cfg: ModelConfig, positions: Array, max_seq: int
+) -> tuple[Array, dict]:
+    """Prefill: returns (output, cache holding the last cache_len tokens)."""
+    q, k, v = _qkv(x, p, cfg, positions)
+    if x.shape[1] >= cfg.blocked_attn_min:
+        out = _gqa_blocked(q, k, v, positions, cfg.sliding_window)
+    else:
+        keep = causal_mask(positions, positions, cfg.sliding_window)
+        out = _gqa_core(q, k, v, keep, cfg.num_heads)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    t = gqa_cache_len(cfg, max_seq)
+    s = x.shape[1]
+    if t >= s:
+        pad = [(0, 0), (0, t - s), (0, 0), (0, 0)]
+        cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    else:
+        # rolling window: slot j holds position p with p % t == j
+        last = jax.lax.dynamic_slice_in_dim(k, s - t, t, axis=1)
+        lastv = jax.lax.dynamic_slice_in_dim(v, s - t, t, axis=1)
+        shift = s % t
+        cache = {
+            "k": jnp.roll(last, shift, axis=1),
+            "v": jnp.roll(lastv, shift, axis=1),
+        }
+    if cfg.kv_cache_dtype == "int8":
+        qk, sk = _kv_quant(cache["k"])
+        qv, sv = _kv_quant(cache["v"])
+        cache = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+    return out, cache
+
+
+def gqa_decode(
+    x: Array, p: dict, cfg: ModelConfig, cache: dict, pos: Array, max_seq: int
+) -> tuple[Array, dict]:
+    """Single-token decode. x [B,1,D]; pos scalar (tokens seen so far)."""
+    t = gqa_cache_len(cfg, max_seq)
+    q, k, v = _qkv(x, p, cfg, pos[None] if pos.ndim == 0 else pos)
+    slot = pos % t
+    int8_cache = cfg.kv_cache_dtype == "int8"
+    if int8_cache:
+        qk, sk = _kv_quant(k)
+        qv, sv = _kv_quant(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], qk, slot, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], qv, slot, 1),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], sk, slot, 1
+            ),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], sv, slot, 1
+            ),
+        }
+        ck = _kv_dequant(new_cache["k"], new_cache["k_scale"], x.dtype)
+        cv = _kv_dequant(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        new_cache = {"k": ck, "v": cv}
+    # slot j holds position pos - ((pos - j) mod t); valid if within window
+    j = jnp.arange(t)
+    slot_pos = pos - jnp.mod(pos - j, t)
+    valid = slot_pos >= 0
+    if cfg.sliding_window is not None:
+        valid &= slot_pos > pos - cfg.sliding_window
+    keep = valid[None, :]  # [S_q=1, T]
+    out = _gqa_core(q, ck, cv, keep, cfg.num_heads)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, h = cfg.d_model, cfg.num_heads
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    nope, pe, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    s = d**-0.5
+    return {
+        "wq_a": ParamSpec((d, qr), ("embed", "q_lora"), scale=s),
+        "q_norm": rmsnorm_spec(qr, "q_lora"),
+        "wq_b": ParamSpec((qr, h, nope + pe), ("q_lora", "heads", "head_dim"), scale=qr**-0.5),
+        "wkv_a": ParamSpec((d, r + pe), ("embed", "kv_lora"), scale=s),
+        "kv_norm": rmsnorm_spec(r, "kv_lora"),
+        "wkv_b": ParamSpec((r, h, nope + vd), ("kv_lora", "heads", "head_dim"), scale=r**-0.5),
+        "wo": ParamSpec((h, vd, d), ("heads", "head_dim", "embed"), scale=(h * vd) ** -0.5),
+    }
+
+
+def _mla_q(x: Array, p: dict, cfg: ModelConfig, positions: Array):
+    dt = x.dtype
+    nope, pe = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt)), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(dt))
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _mla_kv_latent(x: Array, p: dict, cfg: ModelConfig, positions: Array):
+    dt = x.dtype
+    r = cfg.kv_lora_rank
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    ckv, k_pe = kv_a[..., :r], kv_a[..., r:]
+    ckv = rmsnorm(ckv, p["kv_norm"], cfg.norm_eps)
+    k_pe = rope(k_pe[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return ckv, k_pe  # [B,S,R], [B,S,pe]
+
+
+def mla_attend(x: Array, p: dict, cfg: ModelConfig, positions: Array) -> Array:
+    """Full-sequence MLA (train/prefill): expand the latent into K/V.
+
+    Long sequences route through the blocked helper by concatenating the
+    nope and rope halves into one qk dim (k_pe broadcast across heads), so
+    the [S, S] score matrix is never materialized at 32k.
+    """
+    dt = x.dtype
+    nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
+    h = cfg.num_heads
+    q_nope, q_pe = _mla_q(x, p, cfg, positions)
+    ckv, k_pe = _mla_kv_latent(x, p, cfg, positions)
+    kv = jnp.einsum("bsr,rhk->bshk", ckv, p["wkv_b"].astype(dt))
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    # Ulysses resharding (no-op unless rules enable it): attention core
+    # runs head-sharded over the full sequence; a2a in, a2a out. The
+    # alternative — gathering the EXPANDED 128-head K/V across sequence
+    # shards — moves ~70x more bytes than the q/k/v a2a set.
+    from repro.distributed.sharding import ulysses_constraint as _ul
+
+    q_nope = _ul(q_nope, "heads")
+    q_pe = _ul(q_pe, "heads")
+    k_nope = _ul(k_nope, "heads")
+    v = _ul(v, "heads")
+    scale_fix = (nope + cfg.qk_rope_head_dim) ** -0.5
+    if x.shape[1] >= cfg.blocked_attn_min:
+        qcat = jnp.concatenate([q_nope, q_pe], axis=-1)
+        kcat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], q_pe.shape[:1] + (k_pe.shape[1], h, k_pe.shape[-1]))],
+            axis=-1,
+        )
+        # _gqa_blocked scales by d_qk^-0.5 internally; MLA wants the same.
+        out = _gqa_blocked(qcat, kcat, v, positions, None)
+    else:
+        scores = (
+            jnp.einsum("bshk,bthk->bhst", q_nope, k_nope, preferred_element_type=F32)
+            + jnp.einsum("bshk,btk->bhst", q_pe, k_pe, preferred_element_type=F32)
+        ) * scale_fix
+        keep = causal_mask(positions, positions)
+        scores = jnp.where(keep[None, None], scores, _MASK_VALUE)
+        w = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = jnp.einsum("bhst,bthv->bshv", w, v)
+    out = _ul(out, "seq")  # a2a back: seq-sharded, full heads
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dt))
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    return {
+        "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "kpe": jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_fill_cache(
+    x: Array, p: dict, cfg: ModelConfig, positions: Array, max_seq: int
+) -> tuple[Array, dict]:
+    out = mla_attend(x, p, cfg, positions)
+    ckv, k_pe = _mla_kv_latent(x, p, cfg, positions)
+    s = x.shape[1]
+    pad = [(0, 0), (0, max_seq - s), (0, 0)]
+    return out, {"ckv": jnp.pad(ckv, pad), "kpe": jnp.pad(k_pe, pad)}
+
+
+def mla_decode(
+    x: Array, p: dict, cfg: ModelConfig, cache: dict, pos: Array, max_seq: int
+) -> tuple[Array, dict]:
+    """Absorbed-weight decode: attention runs entirely in the latent space.
+
+    The compressed cache (R + pe floats per token — MLA's whole point) is
+    queried by absorbing wkv_b's K-half into q and applying the V-half after
+    the weighted latent sum. Nothing of size [T, H, head_dim] is ever built.
+    """
+    dt = x.dtype
+    nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
+    q_nope, q_pe = _mla_q(x, p, cfg, pos[None] if pos.ndim == 0 else pos)
+    ckv_new, kpe_new = _mla_kv_latent(x, p, cfg, pos[None] if pos.ndim == 0 else pos)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, axis=1)
+    kpe = jax.lax.dynamic_update_slice_in_dim(cache["kpe"], kpe_new, pos, axis=1)
+
+    wkv_k = p["wkv_b"][..., :nope].astype(dt)  # [R, H, nope]
+    wkv_v = p["wkv_b"][..., nope:].astype(dt)  # [R, H, vd]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wkv_k)
+    scale = (nope + cfg.qk_rope_head_dim) ** -0.5
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_lat, ckv, preferred_element_type=F32)
+        + jnp.einsum("bshk,btk->bhst", q_pe, kpe, preferred_element_type=F32)
+    ) * scale
+    valid = jnp.arange(max_seq)[None, :] <= pos  # [1, T]
+    scores = jnp.where(valid[None, None], scores, _MASK_VALUE)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+    ctx = jnp.einsum("bhst,btr->bshr", w, ckv)
+    out = jnp.einsum("bshr,rhv->bshv", ctx, wkv_v)
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dt))
+    return out, {"ckv": ckv, "kpe": kpe}
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(d: int, f: int, gelu: bool = False) -> dict[str, ParamSpec]:
+    p = {
+        "w1": ParamSpec((d, f), ("embed", "mlp"), scale=d**-0.5),
+        "w2": ParamSpec((f, d), ("mlp", "embed"), scale=f**-0.5),
+    }
+    if not gelu:  # SwiGLU gate
+        p["w3"] = ParamSpec((d, f), ("embed", "mlp"), scale=d**-0.5)
+    return p
+
+
+def mlp(x: Array, p: dict) -> Array:
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(dt))
+    if "w3" in p:  # SwiGLU
+        h = jax.nn.silu(h) * jnp.einsum("bsd,df->bsf", x, p["w3"].astype(dt))
+    else:  # GPTBigCode-style GELU (granite)
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(dt))
+
+
+def swiglu_tokens(x: Array, w1: Array, w3: Array, w2: Array) -> Array:
+    """SwiGLU over a flat token axis (used by MoE expert compute)."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+Params = dict[str, Any]

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN (Mixtral top-2, DeepSeek-V2 shared+routed top-6).
+
+GShard-style dense dispatch, the TPU-idiomatic formulation: tokens are
+grouped (one group per sequence), each group dispatches into per-expert
+capacity slots via one-hot einsums, expert FFNs run as a single stacked
+einsum over the expert axis, and a combine einsum scatters results back.
+Everything is static-shaped, so it pjit-shards cleanly: the expert axis maps
+to the "model" mesh axis (expert parallelism) and groups follow the batch.
+
+Capacity overflow drops tokens (their FFN output is 0 and the residual
+passes through) — the standard trade at scale; `capacity_factor` controls
+the drop rate and tests assert zero drops at cf >= k with balanced routers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+from repro.models.layers import mlp, mlp_specs
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+def moe_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    p: dict = {
+        "router": ParamSpec((d, e), ("embed", "experts"), scale=d**-0.5),
+        "w1": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp"), scale=d**-0.5),
+        "w3": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp"), scale=d**-0.5),
+        "w2": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed"), scale=f**-0.5),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_specs(d, cfg.num_shared_experts * f)
+    return p
+
+
+def capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    c = int(
+        group_tokens
+        / cfg.num_experts
+        * cfg.capacity_factor
+        * cfg.experts_per_token
+    )
+    return max(4, -(-c // 4) * 4)  # >=4, rounded up to a multiple of 4
+
+
+def _top_k_gates(logits: Array, k: int, renormalize: bool):
+    """logits [G,S,E] f32 -> (gates [G,S,K], expert_idx [G,S,K], probs)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    if renormalize:  # Mixtral renormalizes the top-k; DeepSeek-V2 does not
+        gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def _dispatch_combine(idx: Array, gates: Array, e: int, c: int):
+    """Build dispatch [G,S,E,C] bool and combine [G,S,E,C] f32 one-hots.
+
+    Slot assignment is sequential over the k routing choices then over the
+    token axis (cumsum), matching GShard: earlier tokens win capacity.
+    """
+    g, s, k = idx.shape
+    counts = jnp.zeros((g, 1, e), jnp.int32)
+    disp = jnp.zeros((g, s, e, c), jnp.bool_)
+    comb = jnp.zeros((g, s, e, c), F32)
+    for j in range(k):  # k is small and static: unrolled
+        oh = jax.nn.one_hot(idx[:, :, j], e, dtype=jnp.int32)  # [G,S,E]
+        pos = jnp.cumsum(oh, axis=1) - oh + counts  # position within expert
+        keep = (pos < c) & (oh > 0)
+        slot = jax.nn.one_hot(jnp.where(keep, pos, 0), c, dtype=jnp.bool_)
+        slot = slot & keep[..., None]
+        disp = disp | slot
+        comb = comb + gates[:, :, j, None, None] * slot.astype(F32)
+        counts = counts + jnp.sum(oh, axis=1, keepdims=True)
+    return disp, comb
+
+
+def load_balance_loss(probs: Array, idx: Array, e: int) -> Array:
+    """Switch/GShard aux loss: E * sum_e fraction_e * mean_prob_e."""
+    sel = jax.nn.one_hot(idx, e, dtype=F32).sum(axis=-2)  # [G,S,E]
+    frac = jnp.mean(sel, axis=(0, 1)) / max(idx.shape[-1], 1)
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    return e * jnp.sum(frac * mean_p)
+
+
+def moe_ffn(
+    x: Array, p: dict, cfg: ModelConfig
+) -> tuple[Array, Array]:
+    """x [B,S,D] -> (out [B,S,D], aux_loss scalar).
+
+    Groups = sequences, or `cfg.moe_group`-token chunks when set (GShard
+    grouping: dispatch tensor volume ∝ group size)."""
+    dt = x.dtype
+    bsz, seq, d = x.shape
+    gs = cfg.moe_group
+    regroup = bool(gs) and seq % gs == 0 and seq > gs
+    if regroup:
+        x = x.reshape(bsz * (seq // gs), gs, d)
+    g, s, _ = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = capacity(cfg, s)
+
+    logits = jnp.einsum("gsd,de->gse", x, p["router"].astype(dt)).astype(F32)
+    gates, idx, probs = _top_k_gates(logits, k, renormalize=cfg.route_norm)
+    aux = load_balance_loss(probs, idx, e)
+    disp, comb = _dispatch_combine(idx, gates, e, c)
+
+    # dispatch -> expert FFN (stacked over the expert axis) -> combine
+    xe = jnp.einsum("gsec,gsd->egcd", disp.astype(dt), x)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, p["w1"].astype(dt)))
+    h = h * jnp.einsum("egcd,edf->egcf", xe, p["w3"].astype(dt))
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w2"].astype(dt))
+    out = jnp.einsum("gsec,egcd->gsd", comb.astype(dt), ye)
+
+    if cfg.num_shared_experts:
+        out = out + mlp(x, p["shared"])
+    if regroup:
+        out = out.reshape(bsz, seq, d)
+    return out, aux
+
+
+def routing_stats(logits: Array, k: int) -> dict[str, Array]:
+    """Free by-product of the selection forward (beyond-paper): per-batch
+    router statistics recorded into the loss history alongside the loss."""
+    probs = jax.nn.softmax(logits.astype(F32), axis=-1)
+    top = jax.lax.top_k(probs, k)[0]
+    return {
+        "router_entropy": -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), -1)),
+        "router_top1": jnp.mean(top[..., 0]),
+    }

@@ -1,0 +1,311 @@
+"""Mamba2 block (SSD — state space duality, arXiv:2405.21060).
+
+The selective SSM with scalar-per-head decay:
+
+    h_t = exp(a_h * dt_t) * h_{t-1} + dt_t * B_t x_t^T     (state [H, P, N])
+    y_t = C_t . h_t + D_h * x_t
+
+computed with the SSD chunked algorithm: split the sequence into chunks of
+length L; inside a chunk the quadratic "attention-like" form runs on the MXU
+(L x L matmuls), and a cheap inter-chunk scan propagates the [H, P, N]
+states. This is the TPU-friendly middle point between a pure recurrence
+(serial, VPU-bound) and the fully quadratic form (O(S^2)). The per-chunk
+math also exists as a Pallas kernel (repro.kernels.ssd); this module is the
+XLA path and the decode/prefill state machinery.
+
+Block layout follows Mamba2: in_proj -> [z (gate), x, B, C, dt], short
+causal conv over (x, B, C), SSD, gated RMSNorm, out_proj.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.params import ParamSpec
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def ssm_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, di = cfg.d_model, cfg.d_inner
+    n, g, h = cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    s = d**-0.5
+    return {
+        # order: [z: di | x: di | B: g*n | C: g*n | dt: h]
+        "in_proj": ParamSpec(
+            (d, 2 * di + 2 * g * n + h), ("embed", "ssm_inner"), scale=s
+        ),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), ("conv", "ssm_inner"), init="conv"),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((h,), ("ssm_heads",), init="ssm_a"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="ssm_dt"),
+        "d_skip": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "norm": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"), scale=di**-0.5),
+    }
+
+
+def _split_proj(zxbcdt: Array, cfg: ModelConfig):
+    di, gn, h = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di : 2 * di]
+    b = zxbcdt[..., 2 * di : 2 * di + gn]
+    c = zxbcdt[..., 2 * di + gn : 2 * di + 2 * gn]
+    dt = zxbcdt[..., 2 * di + 2 * gn :]
+    assert dt.shape[-1] == h
+    return z, x, b, c, dt
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: Array,  # [B, S, H, P]
+    dt: Array,  # [B, S, H]  (already softplus'd, positive)
+    a: Array,  # [H]         (negative)
+    bmat: Array,  # [B, S, G, N]
+    cmat: Array,  # [B, S, G, N]
+    chunk: int,
+    h0: Optional[Array] = None,  # [B, H, P, N] initial state
+) -> tuple[Array, Array]:
+    """SSD algorithm: intra-chunk quadratic + inter-chunk state scan.
+
+    Returns (y [B,S,H,P], final_state [B,H,P,N]). Exact (fp rounding aside)
+    w.r.t. the sequential recurrence — property-tested against ref.
+    """
+    bsz, s_orig, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    pad = (-s_orig) % chunk
+    if pad:
+        # dt=0 pad steps are exact no-ops: decay exp(0*a)=1, update dt*Bx=0.
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, bmat, cmat = zpad(x), zpad(dt), zpad(bmat), zpad(cmat)
+    s = s_orig + pad
+    nc, l = s // chunk, chunk
+    rep = h // g
+
+    xf = x.astype(F32).reshape(bsz, nc, l, h, p)
+    dtf = dt.astype(F32).reshape(bsz, nc, l, h)
+    bf = bmat.astype(F32).reshape(bsz, nc, l, g, n)
+    cf = cmat.astype(F32).reshape(bsz, nc, l, g, n)
+    # per-head B/C (grouped like GQA)
+    bh = jnp.repeat(bf, rep, axis=3)  # [B,nc,L,H,N]
+    ch = jnp.repeat(cf, rep, axis=3)
+
+    da = dtf * a[None, None, None, :]  # [B,nc,L,H] log-decay per step
+    cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative log decay
+
+    # ---- intra-chunk (quadratic, MXU-friendly) ----------------------------
+    # decay from step j to step i (i >= j): exp(cum_i - cum_j)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Li,Lj,H]
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bclhn,bckhn->bclkh", ch, bh)  # C_i . B_j
+    att = cb * decay * dtf[:, :, None, :, :]  # weight on x_j
+    y_intra = jnp.einsum("bclkh,bckhp->bclhp", att, xf)
+
+    # ---- chunk states ------------------------------------------------------
+    # state contribution of chunk: sum_j exp(cum_L - cum_j) dt_j B_j x_j^T
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,L,H]
+    xw = xf * (dtf * tail)[..., None]  # [B,nc,L,H,P]
+    chunk_state = jnp.einsum("bclhn,bclhp->bchpn", bh, xw)  # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))  # [B,nc,H]
+
+    # ---- inter-chunk scan ---------------------------------------------------
+    def scan_body(hprev, inp):
+        cs, cd = inp  # [B,H,P,N], [B,H]
+        hnew = hprev * cd[..., None, None] + cs
+        return hnew, hprev  # emit the state *entering* the chunk
+
+    init = (
+        jnp.zeros((bsz, h, p, n), F32)
+        if h0 is None
+        else h0.astype(F32)
+    )
+    final, h_in = jax.lax.scan(
+        scan_body,
+        init,
+        (chunk_state.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    h_in = h_in.swapaxes(0, 1)  # [B,nc,H,P,N] state entering each chunk
+
+    # ---- inter-chunk contribution to outputs --------------------------------
+    instate_decay = jnp.exp(cum)  # decay from chunk start to step i
+    y_inter = jnp.einsum(
+        "bclhn,bchpn->bclhp", ch * instate_decay[..., None], h_in
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(
+    x: Array,  # [B, H, P] single token
+    dt: Array,  # [B, H]
+    a: Array,  # [H]
+    bvec: Array,  # [B, G, N]
+    cvec: Array,  # [B, G, N]
+    state: Array,  # [B, H, P, N]
+) -> tuple[Array, Array]:
+    """One recurrence step: O(H*P*N) — the SSM's O(1)-per-token decode."""
+    rep = x.shape[1] // bvec.shape[1]
+    bh = jnp.repeat(bvec.astype(F32), rep, axis=1)  # [B,H,N]
+    ch = jnp.repeat(cvec.astype(F32), rep, axis=1)
+    dtf = dt.astype(F32)
+    decay = jnp.exp(dtf * a[None, :])  # [B,H]
+    upd = (dtf[..., None] * x.astype(F32))[..., None] * bh[:, :, None, :]
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# causal conv1d (depthwise) with decode cache
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """x [B,S,C], w [K,C] depthwise causal conv + silu."""
+    k = w.shape[0]
+    xp = jnp.pad(x, [(0, 0), (k - 1, 0), (0, 0)])
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def conv_decode(
+    x: Array, cache: Array, w: Array, b: Array
+) -> tuple[Array, Array]:
+    """x [B,C] one step; cache [B,K-1,C] holds the previous K-1 inputs."""
+    k = w.shape[0]
+    hist = jnp.concatenate([cache, x[:, None, :]], axis=1)  # [B,K,C]
+    out = jnp.einsum("bkc,kc->bc", hist.astype(F32), w.astype(F32))
+    out = jax.nn.silu(out + b[None, :].astype(F32)).astype(x.dtype)
+    return out, hist[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _gated_norm(y: Array, z: Array, w: Array, eps: float) -> Array:
+    """Mamba2's RMSNorm(y * silu(z)) output gate."""
+    return rmsnorm(y * jax.nn.silu(z.astype(F32)).astype(y.dtype), w, eps)
+
+
+def ssm_block(x: Array, p: dict, cfg: ModelConfig) -> Array:
+    """Full-sequence Mamba2 block. x [B,S,D] -> [B,S,D]."""
+    dt_ = x.dtype
+    bsz, s, _ = x.shape
+    h, pd, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    zxbcdt = jnp.einsum("bsd,dc->bsc", x, p["in_proj"].astype(dt_))
+    z, xs, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out = causal_conv(conv_in, p["conv_w"].astype(F32), p["conv_b"].astype(F32)).astype(dt_)
+    xs = conv_out[..., : cfg.d_inner]
+    bmat = conv_out[..., cfg.d_inner : cfg.d_inner + g * n]
+    cmat = conv_out[..., cfg.d_inner + g * n :]
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"][None, None, :].astype(F32))
+    a = -jnp.exp(p["a_log"].astype(F32))
+    y, _ = ssd_chunked(
+        xs.reshape(bsz, s, h, pd),
+        dt,
+        a,
+        bmat.reshape(bsz, s, g, n),
+        cmat.reshape(bsz, s, g, n),
+        chunk=min(cfg.ssm_chunk, s),
+    )
+    y = y + xs.reshape(bsz, s, h, pd) * p["d_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(dt_))
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, h, pd, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_fill_cache(
+    x: Array, p: dict, cfg: ModelConfig
+) -> tuple[Array, dict]:
+    """Prefill: full-sequence output + final (state, conv) cache."""
+    dt_ = x.dtype
+    bsz, s, _ = x.shape
+    h, pd, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    zxbcdt = jnp.einsum("bsd,dc->bsc", x, p["in_proj"].astype(dt_))
+    z, xs, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_cache = conv_in[:, s - (cfg.ssm_conv - 1) :, :]
+    conv_out = causal_conv(conv_in, p["conv_w"].astype(F32), p["conv_b"].astype(F32)).astype(dt_)
+    xs = conv_out[..., : cfg.d_inner]
+    bmat = conv_out[..., cfg.d_inner : cfg.d_inner + g * n]
+    cmat = conv_out[..., cfg.d_inner + g * n :]
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"][None, None, :].astype(F32))
+    a = -jnp.exp(p["a_log"].astype(F32))
+    y, final = ssd_chunked(
+        xs.reshape(bsz, s, h, pd),
+        dt,
+        a,
+        bmat.reshape(bsz, s, g, n),
+        cmat.reshape(bsz, s, g, n),
+        chunk=min(cfg.ssm_chunk, s),
+    )
+    y = y + xs.reshape(bsz, s, h, pd) * p["d_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(dt_))
+    return out, {"state": final, "conv": conv_cache}
+
+
+def ssm_decode(
+    x: Array, p: dict, cfg: ModelConfig, cache: dict
+) -> tuple[Array, dict]:
+    """Single-token decode. x [B,1,D] -> ([B,1,D], new cache)."""
+    dt_ = x.dtype
+    bsz = x.shape[0]
+    h, pd, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    zxbcdt = jnp.einsum("bd,dc->bc", x[:, 0, :], p["in_proj"].astype(dt_))
+    z, xs, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out, conv_cache = conv_decode(
+        conv_in, cache["conv"], p["conv_w"], p["conv_b"]
+    )
+    xs = conv_out[..., : cfg.d_inner]
+    bmat = conv_out[..., cfg.d_inner : cfg.d_inner + g * n]
+    cmat = conv_out[..., cfg.d_inner + g * n :]
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"][None, :].astype(F32))
+    a = -jnp.exp(p["a_log"].astype(F32))
+    y, state = ssd_decode_step(
+        xs.reshape(bsz, h, pd),
+        dt,
+        a,
+        bmat.reshape(bsz, g, n),
+        cmat.reshape(bsz, g, n),
+        cache["state"],
+    )
+    y = y + xs.reshape(bsz, h, pd) * p["d_skip"].astype(dt_)[None, :, None]
+    y = y.reshape(bsz, 1, cfg.d_inner)
+    y = _gated_norm(y, z[:, None, :], p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(dt_))
+    return out, {"state": state, "conv": conv_cache}

@@ -1,0 +1,16 @@
+from repro.optim.optimizer import (  # noqa: F401
+    AdamWConfig,
+    Optimizer,
+    adamw,
+    apply_updates,
+    global_norm,
+    sgd_momentum,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant,
+    exponential_decay,
+    warmup_cosine,
+    warmup_exponential,
+    warmup_linear,
+)
+from repro.optim.ema import ema_init, ema_update  # noqa: F401

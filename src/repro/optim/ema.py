@@ -1,0 +1,20 @@
+"""Exponential moving average of model weights (paper §4.3 uses EMA 0.9999)."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def ema_init(params: Any) -> Any:
+    return jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+
+def ema_update(ema: Any, params: Any, momentum: float = 0.9999) -> Any:
+    return jax.tree.map(
+        lambda e, p: momentum * e + (1.0 - momentum) * p.astype(jnp.float32),
+        ema,
+        params,
+    )

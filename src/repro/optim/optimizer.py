@@ -1,0 +1,112 @@
+"""From-scratch optimizers (no optax in this environment).
+
+Protocol: ``opt.init(params) -> state``; ``opt.update(grads, state, params)
+-> (updates, state)``; ``apply_updates(params, updates)``. States are plain
+pytrees so they shard/checkpoint like parameters (ZeRO-1 handled by the
+sharding rules in repro.distributed).
+
+Moments are kept in f32 even for bf16 params (mixed-precision training);
+updates are cast back to the param dtype at apply time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+
+
+def adamw(schedule: Callable[[jax.Array], jax.Array], cfg: AdamWConfig = AdamWConfig()) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if cfg.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        m = jax.tree.map(lambda mu, g: cfg.b1 * mu + (1 - cfg.b1) * g, state["m"], grads)
+        v = jax.tree.map(
+            lambda nu, g: cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g), state["v"], grads
+        )
+        c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+        lr = schedule(step)
+
+        def upd(mu, nu, p):
+            mhat = mu / c1
+            vhat = nu / c2
+            u = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.weight_decay:
+                u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return -lr * u
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(
+    schedule: Callable[[jax.Array], jax.Array],
+    momentum: float = 0.9,
+    weight_decay: float = 0.0,
+    clip_norm: Optional[float] = None,
+) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, clip_norm / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(jnp.float32), grads, params
+            )
+        m = jax.tree.map(lambda mu, g: momentum * mu + g, state["m"], grads)
+        lr = schedule(step)
+        updates = jax.tree.map(lambda mu: -lr * mu, m)
+        return updates, {"step": step, "m": m}
+
+    return Optimizer(init, update)

@@ -1,0 +1,64 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def sched(step):
+        return jnp.full((), lr, jnp.float32)
+
+    return sched
+
+
+def warmup_linear(lr: float, warmup_steps: int, total_steps: int, end: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        decay = lr + (end - lr) * frac
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return sched
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int, end: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        decay = end + 0.5 * (lr - end) * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return sched
+
+
+def exponential_decay(lr: float, decay_rate: float, decay_steps: float, staircase: bool = True):
+    """The paper's ImageNet schedule shape: decay by 0.97 every 2.4 epochs."""
+
+    def sched(step):
+        e = step.astype(jnp.float32) / decay_steps
+        if staircase:
+            e = jnp.floor(e)
+        return lr * decay_rate**e
+
+    return sched
+
+
+def warmup_exponential(
+    lr: float, warmup_steps: int, decay_rate: float, decay_steps: float
+):
+    """Linear warmup then staircase exponential decay (MNasNet/paper §4.3)."""
+    expo = exponential_decay(lr, decay_rate, decay_steps)
+
+    def sched(step):
+        stepf = step.astype(jnp.float32)
+        warm = lr * stepf / max(warmup_steps, 1)
+        return jnp.where(stepf < warmup_steps, warm, expo(step - warmup_steps))
+
+    return sched

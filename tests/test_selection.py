@@ -1,0 +1,145 @@
+"""Selection algorithms: correctness, paper objective (6), optimality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import (
+    SelectionConfig,
+    brute_force_obftf,
+    select,
+    select_maxk,
+    select_mink,
+    select_obftf,
+    select_obftf_prox,
+    select_prob,
+    select_uniform,
+    subset_mean_residual,
+)
+
+RNG = jax.random.key(0)
+
+
+def _losses(n, seed=0, scale=3.0):
+    return jax.random.normal(jax.random.key(seed), (n,)) * scale + 5.0
+
+
+@pytest.mark.parametrize("method", ["uniform", "prob", "mink", "maxk",
+                                    "obftf_prox", "obftf"])
+@pytest.mark.parametrize("n,b", [(16, 4), (64, 16), (100, 25), (8, 8)])
+def test_selector_shapes_and_validity(method, n, b):
+    losses = _losses(n)
+    idx = select(SelectionConfig(method=method, ratio=b / n), RNG, losses, b)
+    assert idx.shape == (b,)
+    assert idx.dtype == jnp.int32
+    assert (np.asarray(idx) >= 0).all() and (np.asarray(idx) < n).all()
+    # no duplicates (sampling without replacement)
+    assert len(np.unique(np.asarray(idx))) == b
+
+
+def test_mink_picks_lowest():
+    losses = _losses(50, seed=1)
+    idx = np.asarray(select_mink(RNG, losses, 5))
+    expected = np.argsort(np.asarray(losses))[:5]
+    assert set(idx) == set(expected)
+
+
+def test_maxk_picks_highest():
+    losses = _losses(50, seed=2)
+    idx = np.asarray(select_maxk(RNG, losses, 5))
+    expected = np.argsort(-np.asarray(losses))[:5]
+    assert set(idx) == set(expected)
+
+
+def test_prob_prefers_high_loss():
+    """Selective-backprop: high-loss examples selected far more often."""
+    n = 40
+    losses = jnp.concatenate([jnp.full((20,), 0.01), jnp.full((20,), 5.0)])
+    hits = np.zeros(n)
+    for s in range(200):
+        idx = select_prob(jax.random.key(s), losses, 10)
+        hits[np.asarray(idx)] += 1
+    assert hits[20:].sum() > 5 * hits[:20].sum()
+
+
+def test_obftf_beats_uniform_on_residual():
+    """The paper's claim: OBFTF's subset mean tracks the batch mean better."""
+    wins = 0
+    for s in range(30):
+        losses = _losses(64, seed=s)
+        b = 16
+        r_obftf = subset_mean_residual(
+            losses, select_obftf(jax.random.key(s), losses, b)
+        )
+        r_unif = subset_mean_residual(
+            losses, select_uniform(jax.random.key(s), losses, b)
+        )
+        wins += bool(r_obftf <= r_unif)
+    assert wins >= 28  # near-always
+
+
+def test_obftf_near_optimal_vs_brute_force():
+    """Greedy+swap vs the exact MIP objective on small n."""
+    for s in range(20):
+        losses = _losses(12, seed=s)
+        b = 4
+        ours = subset_mean_residual(
+            losses, select_obftf(jax.random.key(s), losses, b, swaps=5)
+        )
+        best = subset_mean_residual(losses, brute_force_obftf(losses, b))
+        # heuristic vs exact MIP: within 5% of batch std of the optimum
+        # (the optimum itself is often ~1e-4 on gaussian losses; demanding
+        # equality would require the exponential search the paper ran)
+        gap = 0.05 * float(jnp.std(losses))
+        assert float(ours) <= float(best) + gap, (s, float(ours), float(best))
+
+
+def test_obftf_prox_matches_paper_stride():
+    """OBFTF_prox faithful to appendix: sorted-desc, stride n/(b+1)."""
+    losses = jnp.asarray(np.random.RandomState(0).randn(32).astype(np.float32))
+    b = 7
+    idx = np.asarray(select_obftf_prox(RNG, losses, b))
+    order = np.argsort(-np.asarray(losses))
+    stride = 32 / (b + 1)
+    expected = order[[int(np.floor(i * stride)) for i in range(1, b + 1)]]
+    np.testing.assert_array_equal(idx, expected)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(6, 24),
+    frac=st.floats(0.2, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_obftf_selected_mean_close(n, frac, seed):
+    """Property: obftf residual <= residual of uniform pick, and the
+    selected mean is within the batch's loss range."""
+    b = max(1, int(frac * n))
+    losses = jax.random.normal(jax.random.key(seed), (n,)) * 2.0
+    idx = select_obftf(jax.random.key(seed + 1), losses, b)
+    sel_mean = float(jnp.mean(losses[idx]))
+    assert float(jnp.min(losses)) - 1e-5 <= sel_mean <= float(jnp.max(losses)) + 1e-5
+    resid = subset_mean_residual(losses, idx)
+    # greedy+swap should track the mean well for b >= 2
+    if b >= 2:
+        assert float(resid) < float(jnp.std(losses)) + 1e-5
+
+
+def test_selectors_are_jittable():
+    losses = _losses(32)
+    for method in ("uniform", "prob", "mink", "maxk", "obftf_prox", "obftf"):
+        cfg = SelectionConfig(method=method, ratio=0.25)
+        f = jax.jit(lambda r, l: select(cfg, r, l, 8))
+        idx = f(RNG, losses)
+        assert idx.shape == (8,)
+
+
+def test_budget():
+    cfg = SelectionConfig(ratio=0.25)
+    assert cfg.budget(128) == 32
+    assert cfg.budget(3) == 1
+    assert cfg.budget(2) == 1  # round(0.5) banker's -> 0, clamped to 1
+    cfg2 = SelectionConfig(ratio=1.0)
+    assert cfg2.budget(7) == 7

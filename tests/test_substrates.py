@@ -1,0 +1,237 @@
+"""Optimizer, schedules, data pipeline, checkpointing, history ledger."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, save_checkpoint
+from repro.core.history import HistoryConfig, LossHistory
+from repro.data import DataConfig, Prefetcher, SyntheticLMStream, mnist_like
+from repro.optim import (
+    adamw,
+    AdamWConfig,
+    apply_updates,
+    constant,
+    exponential_decay,
+    global_norm,
+    sgd_momentum,
+    warmup_cosine,
+    ema_init,
+    ema_update,
+)
+
+RNG = jax.random.key(0)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    w = jnp.asarray([5.0, -3.0])
+    opt = adamw(constant(0.1), AdamWConfig(weight_decay=0.0))
+    state = opt.init({"w": w})
+    params = {"w": w}
+    for _ in range(300):
+        grads = jax.grad(lambda p: jnp.sum(jnp.square(p["w"])))(params)
+        upd, state = opt.update(grads, state, params)
+        params = apply_updates(params, upd)
+    np.testing.assert_allclose(np.asarray(params["w"]), 0.0, atol=1e-2)
+
+
+def test_adamw_clipping():
+    opt = adamw(constant(1.0), AdamWConfig(clip_norm=1.0))
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    upd, _ = opt.update({"w": jnp.asarray([1e6, 0.0, 0.0])}, state, params)
+    assert np.isfinite(np.asarray(upd["w"])).all()
+
+
+def test_sgd_momentum_moves_downhill():
+    opt = sgd_momentum(constant(0.05))
+    params = {"w": jnp.asarray(4.0)}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: p["w"] ** 2)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert abs(float(params["w"])) < 0.1
+
+
+def test_schedules_shapes():
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert abs(float(s(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(s(jnp.asarray(100))) < 0.01
+    e = exponential_decay(0.256, 0.97, 10)
+    np.testing.assert_allclose(float(e(jnp.asarray(20))), 0.256 * 0.97**2, rtol=1e-5)
+
+
+def test_ema():
+    p = {"w": jnp.ones(3)}
+    e = ema_init(p)
+    p2 = {"w": jnp.full((3,), 2.0)}
+    e = ema_update(e, p2, momentum=0.5)
+    np.testing.assert_allclose(np.asarray(e["w"]), 1.5)
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    np.testing.assert_allclose(float(global_norm(t)), 5.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_stream_deterministic_and_restart_exact():
+    cfg = DataConfig(8, 16, 100, seed=3)
+    s1, s2 = SyntheticLMStream(cfg), SyntheticLMStream(cfg)
+    b1, b2 = s1.batch(7), s2.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["instance_id"], b2["instance_id"])
+
+
+def test_stream_shards_disjoint():
+    cfg = DataConfig(8, 16, 100, seed=0)
+    a = SyntheticLMStream(cfg, shard=0, num_shards=2).batch(5)
+    b = SyntheticLMStream(cfg, shard=1, num_shards=2).batch(5)
+    assert set(a["instance_id"]) & set(b["instance_id"]) == set()
+    assert len(a["tokens"]) == 4
+
+
+def test_stream_learnable_structure():
+    """labels are the affine-recurrence continuation of tokens."""
+    cfg = DataConfig(4, 12, 97, seed=1)
+    b = SyntheticLMStream(cfg).batch(0)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
+
+
+def test_stream_outliers_are_noise():
+    cfg = DataConfig(1000, 8, 977, seed=2, outlier_frac=0.1)
+    b = SyntheticLMStream(cfg).batch(0)
+    # ~10% of instances have ids % 1000 < 100
+    frac = np.mean(b["instance_id"] % 1000 < 100)
+    assert 0.05 < frac < 0.15
+
+
+def test_prefetcher():
+    it = iter([{"a": i} for i in range(5)])
+    out = list(Prefetcher(it, depth=2))
+    assert [o["a"] for o in out] == [0, 1, 2, 3, 4]
+
+
+def test_mnist_like_separable():
+    xtr, ytr, xte, yte = mnist_like(512, 128, seed=0)
+    assert xtr.shape == (512, 784) and set(np.unique(ytr)) <= set(range(10))
+    # nearest-prototype accuracy must beat chance by a lot
+    protos = np.stack([xtr[ytr == c].mean(0) for c in range(10)])
+    pred = np.argmin(
+        ((xte[:, None, :] - protos[None]) ** 2).sum(-1), axis=1
+    )
+    assert (pred == yte).mean() > 0.5
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (4, 4), jnp.float32),
+                   "b": jax.random.normal(k, (4,), jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 7, state)
+    mgr = CheckpointManager(str(tmp_path))
+    restored = mgr.restore(7, state)
+    np.testing.assert_array_equal(
+        np.asarray(state["params"]["w"]), restored["params"]["w"]
+    )
+    assert restored["params"]["b"].dtype == np.asarray(state["params"]["b"]).dtype
+    np.testing.assert_array_equal(
+        np.asarray(state["params"]["b"]).view(np.uint16),
+        np.asarray(restored["params"]["b"]).view(np.uint16),
+    )
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30):
+        mgr.save(s, _state(), block=True)
+    assert mgr.latest() == 30
+    kept = sorted(os.listdir(tmp_path))
+    assert kept == ["step_0000000020", "step_0000000030"]
+
+
+def test_checkpoint_ignores_torn_saves(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(10, _state(), block=True)
+    # simulate a torn save: manifest missing
+    torn = tmp_path / "step_0000000099"
+    torn.mkdir()
+    (torn / "params__w.npy").write_bytes(b"junk")
+    assert latest_step(str(tmp_path)) == 10
+    # and a stale tmp dir is GC'd on manager start
+    tmp = tmp_path / "step_0000000050.tmp"
+    tmp.mkdir()
+    CheckpointManager(str(tmp_path))
+    assert not tmp.exists()
+
+
+def test_checkpoint_async_error_surfaces(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "sub"), keep=1)
+    mgr.save(1, {"x": jnp.ones(3)})
+    mgr.wait()  # no error
+    assert mgr.latest() == 1
+
+
+# ---------------------------------------------------------------------------
+# loss history ledger
+# ---------------------------------------------------------------------------
+
+
+def test_history_record_lookup():
+    h = LossHistory(HistoryConfig(capacity=1 << 10, decay=0.5))
+    ids = np.asarray([1, 2, 3])
+    h.record(ids, np.asarray([1.0, 2.0, 3.0]), step=0)
+    ema, seen = h.lookup(ids)
+    assert seen.all()
+    np.testing.assert_allclose(ema, [1.0, 2.0, 3.0])
+    h.record(ids, np.asarray([3.0, 4.0, 5.0]), step=1)
+    ema, _ = h.lookup(ids)
+    np.testing.assert_allclose(ema, [2.0, 3.0, 4.0])  # 0.5-EMA
+
+
+def test_history_unseen_priority():
+    h = LossHistory()
+    h.record(np.asarray([5]), np.asarray([0.1]), step=0)
+    pri = h.priority(np.asarray([5, 6]), step=1)
+    assert pri[1] > pri[0]  # unseen dominates
+
+
+def test_history_top_candidates_prefers_high_loss():
+    h = LossHistory()
+    ids = np.arange(100)
+    losses = np.linspace(0, 1, 100).astype(np.float32)
+    h.record(ids, losses, step=0)
+    top = h.top_candidates(ids, k=10, step=1)
+    assert np.min(top) >= 85  # highest-loss tail
+
+def test_history_state_roundtrip():
+    h = LossHistory()
+    h.record(np.asarray([1, 2]), np.asarray([1.0, 2.0]), step=3)
+    h2 = LossHistory()
+    h2.load_state_dict(h.state_dict())
+    np.testing.assert_array_equal(h2.lookup(np.asarray([1, 2]))[0], [1.0, 2.0])
