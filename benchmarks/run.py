@@ -19,7 +19,7 @@ def main() -> int:
     ap.add_argument(
         "--only",
         default="",
-        help="comma-list: fig1,fig2,table3,selection,kernels,roofline",
+        help="comma-list: fig1,fig2,table3,selection,ledger,kernels,roofline",
     )
     args = ap.parse_args()
     fast = not args.full
@@ -35,21 +35,25 @@ def main() -> int:
     )
 
     sections = [
-        ("fig1", "Fig.1 linear regression (clean + outliers)", fig1_linreg),
-        ("fig2", "Fig.2 MNIST-like classification", fig2_mnist),
-        ("table3", "Table 3 proxy (LM, full OBFTF train step)", table3_lm_proxy),
-        ("selection", "Selection micro-benchmark", selection_bench),
-        ("kernels", "Kernel benchmark", kernel_bench),
-        ("roofline", "Roofline (from dry-run artifacts)", roofline),
+        ("fig1", "Fig.1 linear regression (clean + outliers)",
+         fig1_linreg.main),
+        ("fig2", "Fig.2 MNIST-like classification", fig2_mnist.main),
+        ("table3", "Table 3 proxy (LM, full OBFTF train step)",
+         table3_lm_proxy.main),
+        ("selection", "Selection micro-benchmark", selection_bench.main),
+        ("ledger", "Recycle-ledger benchmark (host vs device vs pallas)",
+         selection_bench.main_ledger),
+        ("kernels", "Kernel benchmark", kernel_bench.main),
+        ("roofline", "Roofline (from dry-run artifacts)", roofline.main),
     ]
     failures = 0
-    for key, title, mod in sections:
+    for key, title, section_main in sections:
         if only and key not in only:
             continue
         print(f"\n=== {title} ===")
         t0 = time.time()
         try:
-            for line in mod.main(fast=fast):
+            for line in section_main(fast=fast):
                 print(line)
             print(f"[{key}: {time.time() - t0:.1f}s]")
         except Exception as e:  # report, continue other sections

@@ -1,14 +1,26 @@
-"""Selection micro-benchmark: us/call + objective quality per method.
+"""Selection + recycle-ledger micro-benchmarks.
 
-Two numbers per (method, n): jitted wall time per call on this host, and
-the paper-objective residual |mean(selected) - mean(batch)| (median over
+Selection: us/call + objective quality per method. Two numbers per
+(method, n): jitted wall time per call on this host, and the
+paper-objective residual |mean(selected) - mean(batch)| (median over
 trials). Shows the engineering trade OBFTF makes vs the paper's CBC MIP:
 the greedy+swap selector is O(us) on-device vs a host MIP round-trip,
 at near-optimal residual (see tests/test_selection.py vs brute force).
+
+Ledger (--ledger): step-time of one record+priority transaction per path:
+  host    — numpy LossHistory with the device->host->device hop a train
+            step actually pays (losses start on device, priorities must
+            end up there);
+  device  — repro.core.device_ledger fused record_priority, one jit,
+            verified transfer-free by running under
+            jax.transfer_guard("disallow");
+  pallas  — the fused kernel (interpret mode off-TPU, so off-TPU its
+            wall time is diagnostic only, not a speed claim).
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -49,5 +61,90 @@ def main(fast: bool = False) -> list[str]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# recycle-ledger benchmark
+# ---------------------------------------------------------------------------
+
+
+def _ledger_inputs(capacity: int, batch: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, 4 * capacity, size=batch).astype(np.int64)
+    losses = jax.random.normal(jax.random.key(seed), (batch,)) * 2 + 5
+    return ids, losses
+
+
+def bench_ledger_host(capacity: int, batch: int, trials: int) -> float:
+    """The hop-per-step baseline: losses live on device, priorities are
+    needed on device, the ledger is a numpy singleton in between."""
+    from repro.core.history import HistoryConfig, LossHistory
+
+    h = LossHistory(HistoryConfig(capacity=capacity))
+    ids, losses_dev = _ledger_inputs(capacity, batch)
+    t0 = time.perf_counter()
+    for step in range(trials):
+        losses = np.asarray(losses_dev)  # device -> host
+        h.record(ids, losses, step)
+        pri = h.priority(ids, step)
+        jnp.asarray(pri).block_until_ready()  # host -> device
+    return (time.perf_counter() - t0) / trials * 1e6
+
+
+def bench_ledger_device(
+    capacity: int, batch: int, trials: int, impl: str
+) -> float:
+    """Fused record+priority, one jit, donated state. The timed loop runs
+    under transfer_guard("disallow"): any per-step host hop would raise."""
+    from repro.core.device_ledger import init_state, record_priority
+    from repro.core.history import HistoryConfig
+
+    cfg = HistoryConfig(capacity=capacity)
+    step_fn = jax.jit(
+        lambda st, i, l, s: record_priority(cfg, st, i, l, s, impl=impl),
+        donate_argnums=(0,),
+    )
+    ids, losses = _ledger_inputs(capacity, batch)
+    ids = jnp.asarray(ids.astype(np.int32))
+    state = init_state(cfg)
+    # stage every input on device up front; the guard then proves the step
+    # itself is transfer-free
+    steps = [jnp.int32(s) for s in range(trials + 1)]
+    state, pri = step_fn(state, ids, losses, steps[0])  # compile
+    jax.block_until_ready((state, pri))
+    with jax.transfer_guard("disallow"):
+        t0 = time.perf_counter()
+        for step in range(1, trials + 1):
+            state, pri = step_fn(state, ids, losses, steps[step])
+        jax.block_until_ready((state, pri))
+    return (time.perf_counter() - t0) / trials * 1e6
+
+
+def main_ledger(fast: bool = False) -> list[str]:
+    on_tpu = jax.default_backend() == "tpu"
+    capacity, batch = (1 << 12, 128) if fast else (1 << 14, 256)
+    trials = 30 if fast else 100
+    pallas_impl = "pallas" if on_tpu else "interpret"
+    out = ["table,path,capacity,batch,us_per_step"]
+    rows = [
+        ("host", lambda: bench_ledger_host(capacity, batch, trials)),
+        ("device", lambda: bench_ledger_device(capacity, batch, trials,
+                                               "ref")),
+        (f"pallas[{pallas_impl}]",
+         lambda: bench_ledger_device(capacity, batch,
+                                     max(3, trials // 10), pallas_impl)),
+    ]
+    for name, fn in rows:
+        out.append(f"ledger,{name},{capacity},{batch},{fn():.1f}")
+    return out
+
+
 if __name__ == "__main__":
-    print("\n".join(main()))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ledger", action="store_true",
+                    help="run the recycle-ledger benchmark too")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only-ledger", action="store_true")
+    args = ap.parse_args()
+    lines = [] if args.only_ledger else main(args.fast)
+    if args.ledger or args.only_ledger:
+        lines += main_ledger(args.fast)
+    print("\n".join(lines))

@@ -1,7 +1,12 @@
 # The paper's primary contribution: OBFTF batch subsampling (Algorithm 1)
 # as a composable JAX transform, plus the per-instance loss ledger that
-# realizes the "record information from serving forwards" production story.
-from repro.core.history import HistoryConfig, LossHistory  # noqa: F401
+# realizes the "record information from serving forwards" production story
+# — host reference (history) and device-resident port (device_ledger).
+from repro.core.history import HistoryConfig, LossHistory, slot_for  # noqa: F401
+from repro.core.device_ledger import (  # noqa: F401
+    DeviceLedger,
+    LedgerState,
+)
 from repro.core.obftf import (  # noqa: F401
     OBFTFConfig,
     make_eval_step,

@@ -1,0 +1,236 @@
+"""Device-resident recycle ledger: ``LossHistory`` as pure JAX ops.
+
+The host-side ``repro.core.history.LossHistory`` is the paper's "record a
+constant amount of information per instance" store, but looking it up from a
+train step costs a device->host->device round-trip per batch. This module is
+the production port: the same fixed-capacity EMA table held as device arrays,
+with ``record`` / ``lookup`` / ``priority`` as jittable pure functions
+(scatter-EMA write, hash-probe read, staleness-boosted score) that fuse into
+the OBFTF step — the recycle signal never leaves the accelerator.
+
+Addressing is shared with the host ledger (``history.slot_for``, 32-bit
+Fibonacci hash), so ``state_dict`` round-trips between the two: the numpy
+ledger stays the reference implementation and checkpoint interchange format.
+Collision semantics match exactly, including deterministic last-write-wins
+on intra-batch slot collisions (numpy fancy-assignment order).
+
+Sharding: ``repro.distributed.ledger`` maps these ops over the data axes
+with each shard owning a slice of the table, so capacity scales with the
+mesh instead of host RAM. The fused ``record_priority`` additionally has a
+Pallas kernel (``repro.kernels.ledger``), dispatched via ``impl=``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.history import FIB32, HistoryConfig, LossHistory, slot_for
+
+Array = jax.Array
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LedgerState:
+    """The ledger table as a pytree of device arrays.
+
+    ``count``/``last_seen``/``owner`` are int32 on device (JAX x32); the
+    host interchange format is int64. Ids are keyed by their low 32 bits.
+    """
+
+    ema: Array  # [capacity] f32
+    count: Array  # [capacity] i32
+    last_seen: Array  # [capacity] i32, -1 = never
+    owner: Array  # [capacity] i32, -1 = empty
+
+    def tree_flatten(self):
+        return (self.ema, self.count, self.last_seen, self.owner), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.ema.shape[0]
+
+
+def init_state(cfg: HistoryConfig) -> LedgerState:
+    assert cfg.capacity & (cfg.capacity - 1) == 0, "capacity must be 2^k"
+    n = cfg.capacity
+    return LedgerState(
+        ema=jnp.zeros((n,), F32),
+        count=jnp.zeros((n,), I32),
+        last_seen=jnp.full((n,), -1, I32),
+        owner=jnp.full((n,), -1, I32),
+    )
+
+
+def slot_for_jnp(ids: Array, capacity: int) -> Array:
+    """jnp twin of ``history.slot_for`` — bit-identical for any int input."""
+    x = ids.astype(I32).astype(jnp.uint32)  # low 32 bits, like numpy's view
+    h = x * jnp.uint32(FIB32)
+    h = h ^ (h >> jnp.uint32(16))
+    return (h & jnp.uint32(capacity - 1)).astype(I32)
+
+
+def _winner_mask(slots: Array, capacity: int) -> Array:
+    """True for the last batch item targeting each slot (numpy fancy-index
+    semantics: with duplicate slots the last write wins, deterministically —
+    plain ``.at[].set`` with duplicates is unspecified in XLA)."""
+    order = jnp.arange(slots.shape[0], dtype=I32)
+    last = jnp.full((capacity,), -1, I32).at[slots].max(order)
+    return last[slots] == order
+
+
+def record(
+    cfg: HistoryConfig, state: LedgerState, ids: Array, losses: Array, step
+) -> LedgerState:
+    """Pure scatter-EMA write; semantics identical to ``LossHistory.record``."""
+    ids = jnp.asarray(ids).astype(I32)
+    losses = jnp.asarray(losses).astype(F32)
+    slots = slot_for_jnp(ids, state.capacity)
+    fresh = state.owner[slots] != ids
+    d = cfg.decay
+    prev = jnp.where(fresh, losses, state.ema[slots])
+    new_ema = d * prev + (1.0 - d) * losses
+    new_count = jnp.where(fresh, 1, state.count[slots] + 1)
+    keep = _winner_mask(slots, state.capacity)
+    tgt = jnp.where(keep, slots, state.capacity)  # OOB scatters are dropped
+    step32 = jnp.asarray(step).astype(I32)
+    return LedgerState(
+        ema=state.ema.at[tgt].set(new_ema, mode="drop"),
+        count=state.count.at[tgt].set(new_count, mode="drop"),
+        last_seen=state.last_seen.at[tgt].set(
+            jnp.broadcast_to(step32, tgt.shape), mode="drop"
+        ),
+        owner=state.owner.at[tgt].set(ids, mode="drop"),
+    )
+
+
+def lookup(state: LedgerState, ids: Array) -> tuple[Array, Array]:
+    """Hash-probe read -> (ema_loss f32, seen_mask bool)."""
+    ids = jnp.asarray(ids).astype(I32)
+    slots = slot_for_jnp(ids, state.capacity)
+    seen = state.owner[slots] == ids
+    return jnp.where(seen, state.ema[slots], 0.0).astype(F32), seen
+
+
+def priority(cfg: HistoryConfig, state: LedgerState, ids: Array, step) -> Array:
+    """Staleness-boosted score, identical to ``LossHistory.priority``."""
+    ids = jnp.asarray(ids).astype(I32)
+    slots = slot_for_jnp(ids, state.capacity)
+    seen = state.owner[slots] == ids
+    step32 = jnp.asarray(step).astype(I32)
+    age = jnp.maximum(step32 - state.last_seen[slots], 0).astype(F32)
+    boost = jnp.exp2(age / cfg.staleness_half_life)
+    score = state.ema[slots] * boost
+    return jnp.where(seen, score, cfg.unseen_priority).astype(F32)
+
+
+def record_priority(
+    cfg: HistoryConfig,
+    state: LedgerState,
+    ids: Array,
+    losses: Array,
+    step,
+    impl: Optional[str] = None,
+) -> tuple[LedgerState, Array]:
+    """Fused write+score: record the batch, return post-record priorities.
+
+    Equivalent to ``record`` followed by ``priority`` at the same step, in
+    one pass (one hash, one table visit). ``impl`` selects the backend as in
+    ``repro.kernels.ops`` ("ref" = the jnp path below, "pallas"/"interpret"
+    = the fused Pallas kernel).
+    """
+    if impl not in (None, "ref"):
+        from repro.kernels import ops as kops
+
+        ema, count, last_seen, owner, pri = kops.ledger_record_priority(
+            state.ema,
+            state.count,
+            state.last_seen,
+            state.owner,
+            jnp.asarray(ids).astype(I32),
+            jnp.asarray(losses).astype(F32),
+            jnp.asarray(step).astype(I32),
+            decay=cfg.decay,
+            unseen_priority=cfg.unseen_priority,
+            impl=impl,
+        )
+        return LedgerState(ema, count, last_seen, owner), pri
+    new = record(cfg, state, ids, losses, step)
+    return new, priority(cfg, new, ids, step)
+
+
+class DeviceLedger:
+    """Object wrapper mirroring the ``LossHistory`` API on device arrays.
+
+    Methods are jitted; the held state never leaves the device except via
+    ``state_dict()`` (the host interchange path). Use the pure functions
+    above to fuse ledger ops into a larger jitted step.
+    """
+
+    def __init__(self, cfg: HistoryConfig = HistoryConfig()):
+        self.cfg = cfg
+        self.state = init_state(cfg)
+        self._record = jax.jit(partial(record, cfg), donate_argnums=(0,))
+        self._lookup = jax.jit(lookup)
+        self._priority = jax.jit(partial(priority, cfg))
+
+    # -- LossHistory-compatible surface ------------------------------------
+
+    def record(self, ids, losses, step) -> None:
+        self.state = self._record(self.state, ids, losses, step)
+
+    def lookup(self, ids) -> tuple[Array, Array]:
+        return self._lookup(self.state, ids)
+
+    def priority(self, ids, step) -> Array:
+        return self._priority(self.state, ids, step)
+
+    def record_priority(self, ids, losses, step, impl=None) -> Array:
+        self.state, pri = record_priority(
+            self.cfg, self.state, ids, losses, step, impl=impl
+        )
+        return pri
+
+    # -- host interchange ---------------------------------------------------
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Export in the ``LossHistory`` checkpoint format (int64 host dtypes)."""
+        return {
+            "ema": np.asarray(self.state.ema, np.float32),
+            "count": np.asarray(self.state.count, np.int64),
+            "last_seen": np.asarray(self.state.last_seen, np.int64),
+            "owner": np.asarray(self.state.owner, np.int64),
+        }
+
+    def load_state_dict(self, state: dict[str, np.ndarray]) -> None:
+        n = np.asarray(state["ema"]).shape[0]
+        assert n == self.cfg.capacity, (n, self.cfg.capacity)
+        self.state = LedgerState(
+            ema=jnp.asarray(np.asarray(state["ema"], np.float32)),
+            count=jnp.asarray(np.asarray(state["count"]).astype(np.int32)),
+            last_seen=jnp.asarray(np.asarray(state["last_seen"]).astype(np.int32)),
+            owner=jnp.asarray(np.asarray(state["owner"]).astype(np.int32)),
+        )
+
+    @classmethod
+    def from_host(cls, history: LossHistory) -> "DeviceLedger":
+        led = cls(history.cfg)
+        led.load_state_dict(history.state_dict())
+        return led
+
+    def to_host(self) -> LossHistory:
+        h = LossHistory(self.cfg)
+        h.load_state_dict(self.state_dict())
+        return h

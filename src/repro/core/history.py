@@ -9,9 +9,10 @@ last-seen step. The data pipeline uses ``priority`` to bias candidate
 selection toward instances whose loss signal says they still matter, and the
 train step's in-batch OBFTF selection then does the fine-grained pick.
 
-Host-side by design: in production this is the feature-store/ledger sidecar,
-not device memory. It is deterministic, picklable (checkpointable), and
-O(1) per update.
+This host-side store is the *reference implementation* and checkpoint
+interchange format. The device-resident port (`repro.core.device_ledger`)
+shares the slot addressing below, so `state_dict` round-trips between the
+two. It is deterministic, picklable (checkpointable), and O(1) per update.
 """
 
 from __future__ import annotations
@@ -20,6 +21,22 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
+
+# 32-bit Fibonacci multiplier (2^32/phi). Addressing is deliberately 32-bit
+# so the device ledger — which runs under JAX x32 — computes the *same* slot
+# for the same id. Instance ids are keyed by their low 32 bits; ids must stay
+# below 2^31 for host<->device owner comparison to agree (the synthetic
+# pipeline's pool is 2^20). The jnp twin is device_ledger.slot_for_jnp —
+# these two functions are the only implementations of the hash.
+FIB32 = 0x9E3779B9
+
+
+def slot_for(ids: np.ndarray, capacity: int) -> np.ndarray:
+    """Hash instance ids to table slots (shared host/device addressing)."""
+    x = np.asarray(ids, np.int64).astype(np.uint32)
+    h = x * np.uint32(FIB32)  # wrapping u32 multiply
+    h = h ^ (h >> np.uint32(16))
+    return (h & np.uint32(capacity - 1)).astype(np.int64)
 
 
 @dataclasses.dataclass
@@ -45,10 +62,8 @@ class LossHistory:
     # -- addressing ---------------------------------------------------------
 
     def _slot(self, ids: np.ndarray) -> np.ndarray:
-        ids = np.asarray(ids, np.int64)
         # Fibonacci hashing keeps sequential production ids well spread.
-        h = (ids * np.int64(-7046029254386353131)) & np.int64(2**63 - 1)
-        return (h >> 16) & (self.cfg.capacity - 1)
+        return slot_for(ids, self.cfg.capacity)
 
     # -- writes -------------------------------------------------------------
 

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.selection import SelectionConfig, select
+from repro.distributed.compat import axis_size, shard_map
 from repro.optim import Optimizer, apply_updates, global_norm
 
 Array = jax.Array
@@ -71,7 +72,7 @@ def _dp_shard_count(mesh: Mesh, dp_axes: Sequence[str]) -> int:
 def _linear_dp_index(dp_axes: Sequence[str]) -> Array:
     idx = jnp.zeros((), jnp.int32)
     for a in dp_axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -115,12 +116,11 @@ def select_and_gather(
         return sub, idx, losses_l[idx]
 
     dp = P(tuple(dp_axes))
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(tuple(dp_axes)), _batch_specs(batch, tuple(dp_axes)), P()),
         out_specs=(_batch_specs(batch, tuple(dp_axes)), dp, dp),
-        check_vma=False,
     )
     return fn(losses, batch, rng)
 
@@ -158,17 +158,19 @@ def make_train_step(
             loss, grads = jax.value_and_grad(mean_loss)(params)
             sel_losses = jnp.full((1,), loss)
             residual = jnp.zeros(())
-            kept = jnp.asarray(
-                next(iter(inputs.values())).shape[0], jnp.float32
-            )
+            n = next(iter(inputs.values())).shape[0]
+            kept = jnp.asarray(n, jnp.float32)
+            step_cost = jnp.asarray(3.0, jnp.float32)  # fwd + bwd on all n
         else:
             # 4-5: the "inference" forward — no AD residuals kept.
-            if cfg.recycle_forward and "recorded_loss" in batch:
+            recycled = cfg.recycle_forward and "recorded_loss" in batch
+            if recycled:
                 losses = batch["recorded_loss"].astype(jnp.float32)
             else:
                 losses = jax.lax.stop_gradient(
                     per_example_loss_fn(params, inputs, rng_fwd)
                 ).astype(jnp.float32)
+            n = losses.shape[0]
 
             # 6-7: subset selection, shard-local under the mesh.
             sub_batch, _, sel_losses = select_and_gather(
@@ -183,6 +185,11 @@ def make_train_step(
             # The paper's objective value for the realized pick.
             residual = jnp.abs(jnp.mean(sel_losses) - jnp.mean(losses))
             kept = jnp.asarray(sel_losses.shape[0], jnp.float32)
+            # Step cost in units of one full-batch forward C (paper's model):
+            # selection forward (1C, skipped when recycled) + fwd+bwd on the
+            # kept subset (3 * kept/n C). The recycle win is this counter
+            # dropping below 1: one backward from ten already-paid forwards.
+            step_cost = (0.0 if recycled else 1.0) + 3.0 * kept / n
 
             # 8: one backward on the kept subset only.
             def mean_loss(p):
@@ -202,6 +209,7 @@ def make_train_step(
             "selected_mean_loss": jnp.mean(sel_losses),
             "selection_residual": residual,
             "kept": kept,
+            "step_cost": step_cost,
             "grad_norm": global_norm(updates),
         }
         return new_state, metrics

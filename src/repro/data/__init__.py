@@ -1,6 +1,7 @@
 from repro.data.pipeline import (  # noqa: F401
     DataConfig,
     Prefetcher,
+    RecycleFeed,
     SyntheticLMStream,
     SyntheticRegression,
     mnist_like,

@@ -95,6 +95,57 @@ class SyntheticLMStream:
             step += 1
 
 
+class RecycleFeed:
+    """Joins the recycle ledger's loss signal onto a batch stream.
+
+    The ``ledger`` switch picks where the serve->train join happens:
+
+    * ``"host"`` — the numpy ``LossHistory`` is probed at batch-build time
+      and ``recorded_loss`` ships with the batch. Every step pays the
+      device->host->device hop (the naive pipeline this repo started with).
+    * ``"device"`` — pass-through: batches carry only ``instance_id`` and
+      the join runs *inside* the jitted train step against the
+      device-resident ledger (``repro.core.device_ledger``), so the recycle
+      signal never touches the host.
+
+    ``cold_loss`` is the optimistic-unseen fallback: instances the ledger
+    has never scored get a huge recorded loss so selection treats them as
+    must-see (cold-start behaves like uniform until the ledger warms).
+    """
+
+    LEDGERS = ("host", "device")
+
+    def __init__(
+        self,
+        stream: "SyntheticLMStream",
+        history=None,
+        ledger: str = "host",
+        cold_loss: float = 1e3,
+    ):
+        assert ledger in self.LEDGERS, ledger
+        assert ledger == "device" or history is not None, \
+            "host ledger feed needs a LossHistory"
+        self.stream = stream
+        self.history = history
+        self.ledger = ledger
+        self.cold_loss = cold_loss
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        raw = self.stream.batch(step)
+        if self.ledger == "host":
+            ema, seen = self.history.lookup(raw["instance_id"])
+            raw["recorded_loss"] = np.where(
+                seen, ema, self.cold_loss
+            ).astype(np.float32)
+        return raw
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
 class SyntheticRegression:
     """The paper's Fig.1 linear-regression data: y = 2x + 1 + U(-5, 5),
     with an optional 2% outlier band (+U(-20, 20))."""

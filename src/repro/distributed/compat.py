@@ -1,0 +1,39 @@
+"""Version shims for the JAX APIs this repo straddles.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (where its
+replication-check kwarg is ``check_rep``) to ``jax.shard_map`` (where it is
+``check_vma``), and ``jax.lax.axis_size`` only exists on the newer line.
+Every call site in this repo goes through the shims below so both API
+generations work; do not call ``jax.shard_map``/``jax.lax.axis_size``
+directly.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(name: str) -> int:
+    """Static size of a bound mesh axis (inside shard_map)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    from jax._src import core as _core  # jax <= 0.4.x
+
+    return _core.axis_frame(name)
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check,
+        )
+
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check,
+        )

@@ -1,0 +1,137 @@
+"""Mesh-sharded recycle ledger: each data shard owns a slice of the table.
+
+The device ledger (`repro.core.device_ledger`) holds one [capacity] table.
+At scale that table should grow with the fleet, not with one chip's HBM:
+here the table is laid out along the data axes — shard s owns slots
+[s*C/S, (s+1)*C/S) as a *local* hash table of capacity C/S — and every
+ledger op runs inside ``shard_map`` over those axes. Ids hash into the
+local slice, so ``record``/``lookup``/``priority`` are zero-communication:
+an instance's record lives on the shard that consumed it, which is exactly
+the shard that will see it again (the synthetic pipeline pins each id to a
+fixed shard, matching a production feed keyed by a stable partitioner).
+
+Total capacity therefore scales linearly with the data-parallel degree,
+and the recycle signal never crosses a shard boundary or touches the host
+— the same decomposition argument as shard-local OBFTF selection.
+
+Note the addressing consequence: a sharded ledger's slot layout differs
+from the host/global layout (local capacity C/S), so its ``state_dict`` is
+its own interchange format. Use per-shard ``DeviceLedger`` round-trips when
+migrating between layouts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.device_ledger import (
+    LedgerState,
+    init_state,
+    lookup,
+    priority,
+    record,
+    record_priority,
+)
+from repro.core.history import HistoryConfig
+from repro.distributed.compat import shard_map
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedLedgerOps:
+    """Jittable ledger ops closed over (mesh, dp_axes, per-shard config).
+
+    All entry points take/return a ``LedgerState`` whose arrays are sharded
+    ``P(dp_axes)`` along the slot axis; ids/losses are sharded the same way
+    along the batch axis. Fuse these into a jitted train step — nothing
+    here ever leaves the device.
+    """
+
+    mesh: Mesh
+    dp_axes: tuple[str, ...]
+    cfg: HistoryConfig  # global config; capacity = global slots
+    local_cfg: HistoryConfig  # per-shard slice config
+
+    @property
+    def shards(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def _wrap(self, fn, n_batch_args, out_specs):
+        dp = P(tuple(self.dp_axes))
+        state_spec = LedgerState(dp, dp, dp, dp)
+        in_specs = (state_spec,) + (dp,) * n_batch_args + (P(),)
+        return shard_map(
+            fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs
+        )
+
+    def init(self) -> LedgerState:
+        """Global [capacity] state, placed sharded over the slot axis."""
+        sh = NamedSharding(self.mesh, P(tuple(self.dp_axes)))
+        return jax.tree.map(
+            lambda x: jax.device_put(x, sh), init_state(self.cfg)
+        )
+
+    def record(self, state: LedgerState, ids, losses, step) -> LedgerState:
+        dp = P(tuple(self.dp_axes))
+        state_spec = LedgerState(dp, dp, dp, dp)
+        fn = self._wrap(
+            lambda st, i, l, s: record(self.local_cfg, st, i, l, s),
+            2,
+            state_spec,
+        )
+        return fn(state, ids, losses, jnp.asarray(step, jnp.int32))
+
+    def lookup(self, state: LedgerState, ids):
+        dp = P(tuple(self.dp_axes))
+        fn = self._wrap(lambda st, i, s: lookup(st, i), 1, (dp, dp))
+        return fn(state, ids, jnp.zeros((), jnp.int32))
+
+    def priority(self, state: LedgerState, ids, step):
+        dp = P(tuple(self.dp_axes))
+        fn = self._wrap(
+            lambda st, i, s: priority(self.local_cfg, st, i, s), 1, dp
+        )
+        return fn(state, ids, jnp.asarray(step, jnp.int32))
+
+    def record_priority(
+        self, state: LedgerState, ids, losses, step, impl: Optional[str] = None
+    ):
+        dp = P(tuple(self.dp_axes))
+        state_spec = LedgerState(dp, dp, dp, dp)
+        fn = self._wrap(
+            lambda st, i, l, s: record_priority(
+                self.local_cfg, st, i, l, s, impl=impl
+            ),
+            2,
+            (state_spec, dp),
+        )
+        return fn(state, ids, losses, jnp.asarray(step, jnp.int32))
+
+
+def sharded_ledger_ops(
+    mesh: Mesh,
+    cfg: HistoryConfig = HistoryConfig(),
+    dp_axes: Sequence[str] = ("data",),
+) -> ShardedLedgerOps:
+    """Build sharded ledger ops; global capacity must divide over the mesh."""
+    shards = 1
+    for a in dp_axes:
+        shards *= mesh.shape[a]
+    if cfg.capacity % shards:
+        raise ValueError(
+            f"ledger capacity {cfg.capacity} not divisible by {shards} shards"
+        )
+    local_cap = cfg.capacity // shards
+    if local_cap & (local_cap - 1):
+        raise ValueError(f"per-shard capacity {local_cap} must be 2^k")
+    local_cfg = dataclasses.replace(cfg, capacity=local_cap)
+    return ShardedLedgerOps(
+        mesh=mesh, dp_axes=tuple(dp_axes), cfg=cfg, local_cfg=local_cfg
+    )

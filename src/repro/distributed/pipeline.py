@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.distributed.compat import axis_size, shard_map
+
 Array = jax.Array
 
 
@@ -39,7 +41,7 @@ def pipeline_apply(
     """Run the pipeline; every stage returns the final outputs [n_micro, ...]
     (identical on all stages — the last stage's results are broadcast back
     through the same ring, costing one extra ring pass)."""
-    n_stages = jax.lax.axis_size(axis)
+    n_stages = axis_size(axis)
     stage = jax.lax.axis_index(axis)
     n_micro = micro.shape[0]
     ticks = n_micro + n_stages - 1
@@ -105,12 +107,11 @@ def make_pipeline_fn(
         pspec = jax.tree.map(
             lambda p: P(axis, *([None] * (p.ndim - 1))), params
         )
-        out = jax.shard_map(
+        out = shard_map(
             inner,
             mesh=mesh,
             in_specs=(pspec, P()),
             out_specs=P(),
-            check_vma=False,
         )(params, micro)
         return out.reshape(b, *x.shape[1:])
 

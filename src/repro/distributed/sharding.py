@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 from repro.models.params import ParamSpec, is_spec
 
 MeshAxes = Optional[tuple[str, ...] | str]
@@ -250,12 +252,11 @@ def _int8_zero3_gather(w: jax.Array, mesh: Mesh, chunk: int = 256) -> jax.Array:
 
     gathered.defvjp(fwd, bwd)
 
-    out = jax.shard_map(
+    out = shard_map(
         gathered,
         mesh=mesh,
         in_specs=P(axes),
         out_specs=P(),
-        check_vma=False,
     )(flat)
     return _grad_bf16(out[:n].reshape(shape).astype(dtype))
 
@@ -346,12 +347,11 @@ def cp_kv_gather(x: jax.Array, seq_axis_dim: int = 1) -> jax.Array:
         )
 
     gathered.defvjp(fwd, bwd)
-    return jax.shard_map(
+    return shard_map(
         gathered,
         mesh=mesh,
         in_specs=P(*in_parts),
         out_specs=P(*out_parts),
-        check_vma=False,
     )(x)
 
 

@@ -6,6 +6,9 @@ xent        — fused per-token CE over blocked vocab: makes "record a loss
 decode_attn — flash decode attention: the serving forward whose losses
               OBFTF recycles.
 ssd         — Mamba2 chunk scan (assigned ssm/hybrid architectures).
+ledger      — fused recycle-ledger record+priority: one VMEM residency per
+              batch for the device ledger's hash + EMA scatter + score
+              (repro.core.device_ledger dispatches here via impl=).
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), ref.py oracle entry,
 ops.py jit'd wrapper with backend dispatch + custom_vjp.

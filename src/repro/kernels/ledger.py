@@ -1,0 +1,182 @@
+"""Fused recycle-ledger update: hash + EMA scatter + priority, one pass.
+
+The device ledger (`repro.core.device_ledger`) issues three table visits per
+batch on the unfused path (owner probe, EMA scatter, priority gather). This
+kernel does the whole ``record -> priority`` transaction in a single VMEM
+residency: the table (four [capacity] arrays) is loaded once, every batch
+item's slot is hashed on the fly, the EMA/count/last_seen/owner update is
+applied with numpy last-write-wins collision semantics, and the post-update
+staleness-boosted priority is emitted per item.
+
+Scatter on TPU: there is no vector scatter unit, so the update loop runs
+``fori_loop`` over batch items with a masked read-modify-write of the
+VMEM-resident table — each iteration is one [rows, 128] vector select, the
+standard TPU scatter emulation. Update values are computed against the
+*input* snapshot (not the running table), which is exactly what makes the
+sequential loop reproduce numpy fancy-assignment semantics: the last item
+targeting a slot wins with a value computed from the pre-batch state.
+
+Table layout: [capacity] viewed as [capacity/128, 128] (lane-major). The
+whole table must fit VMEM — capacity <= ~2^18 slots (4 MB for the four
+arrays), which is the per-shard slice size under the sharded ledger, not
+the global capacity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The canonical slot addressing (32-bit Fibonacci hash) — jnp ops, so it
+# traces inside the kernel on per-item scalars just as well as on vectors.
+from repro.core.device_ledger import slot_for_jnp
+
+F32 = jnp.float32
+I32 = jnp.int32
+LANES = 128
+
+
+def _ledger_kernel(
+    step_ref,  # [1, 1] i32
+    ids_ref,  # [Bp, 1] i32
+    loss_ref,  # [Bp, 1] f32
+    ema_in,  # [R, 128] f32   (pre-batch snapshot)
+    cnt_in,  # [R, 128] i32
+    ls_in,  # [R, 128] i32
+    own_in,  # [R, 128] i32
+    ema_out,
+    cnt_out,
+    ls_out,
+    own_out,
+    pri_ref,  # [Bp, 1] f32
+    *,
+    batch: int,
+    decay: float,
+    unseen_priority: float,
+):
+    rows = ema_in.shape[0]
+    cap = rows * LANES
+    row_iota = jax.lax.broadcasted_iota(I32, (rows, LANES), 0)
+    col_iota = jax.lax.broadcasted_iota(I32, (rows, LANES), 1)
+    step = step_ref[0, 0]
+
+    def slot_mask(i):
+        idv = ids_ref[i, 0]
+        slot = slot_for_jnp(idv, cap)
+        mask = (row_iota == slot // LANES) & (col_iota == slot % LANES)
+        return idv, mask
+
+    def probe(mask, table):
+        # gather-by-reduction: exactly one element of `table` is selected
+        return jnp.sum(jnp.where(mask, table, jnp.zeros_like(table)))
+
+    # pass 1: scatter updates. Values come from the *input* snapshot, the
+    # running table only receives writes — sequential last-write-wins then
+    # matches the host ledger's vectorized numpy semantics exactly.
+    def write(i, carry):
+        ema, cnt, ls, own = carry
+        idv, mask = slot_mask(i)
+        loss = loss_ref[i, 0]
+        fresh = probe(mask, own_in[...]) != idv
+        prev = jnp.where(fresh, loss, probe(mask, ema_in[...]))
+        new_ema = decay * prev + (1.0 - decay) * loss
+        new_cnt = jnp.where(fresh, 1, probe(mask, cnt_in[...]) + 1)
+        return (
+            jnp.where(mask, new_ema, ema),
+            jnp.where(mask, new_cnt, cnt),
+            jnp.where(mask, step, ls),
+            jnp.where(mask, idv, own),
+        )
+
+    ema, cnt, ls, own = jax.lax.fori_loop(
+        0, batch, write, (ema_in[...], cnt_in[...], ls_in[...], own_in[...])
+    )
+    ema_out[...] = ema
+    cnt_out[...] = cnt
+    ls_out[...] = ls
+    own_out[...] = own
+
+    # pass 2: post-update priority per item. last_seen == step for every
+    # recorded slot, so the staleness boost is exp2(0) = 1 and the score is
+    # the fresh EMA; items evicted within the batch read back as unseen.
+    pri_iota = jax.lax.broadcasted_iota(I32, pri_ref.shape, 0)
+
+    def score(i, pri):
+        idv, mask = slot_mask(i)
+        seen = probe(mask, own) == idv
+        val = jnp.where(seen, probe(mask, ema), unseen_priority)
+        return jnp.where(pri_iota == i, val, pri)
+
+    pri_ref[...] = jax.lax.fori_loop(
+        0, batch, score, jnp.full(pri_ref.shape, unseen_priority, F32)
+    )
+
+
+def _pad_rows(x, mult):
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad), (0, 0)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("decay", "unseen_priority", "interpret")
+)
+def ledger_record_priority(
+    ema: jax.Array,  # [capacity] f32
+    count: jax.Array,  # [capacity] i32
+    last_seen: jax.Array,  # [capacity] i32
+    owner: jax.Array,  # [capacity] i32
+    ids: jax.Array,  # [B] i32
+    losses: jax.Array,  # [B] f32
+    step: jax.Array,  # scalar i32
+    *,
+    decay: float,
+    unseen_priority: float,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """-> (ema', count', last_seen', owner', priority [B] f32)."""
+    cap = ema.shape[0]
+    assert cap % LANES == 0 and cap & (cap - 1) == 0, cap
+    b = ids.shape[0]
+    rows = cap // LANES
+    shape2d = (rows, LANES)
+    ids2 = _pad_rows(ids.astype(I32)[:, None], 8)
+    loss2 = _pad_rows(losses.astype(F32)[:, None], 8)
+    bp = ids2.shape[0]
+    step2 = jnp.asarray(step, I32).reshape(1, 1)
+    kernel = functools.partial(
+        _ledger_kernel,
+        batch=b,
+        decay=float(decay),
+        unseen_priority=float(unseen_priority),
+    )
+    ema2, cnt2, ls2, own2, pri = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct(shape2d, F32),
+            jax.ShapeDtypeStruct(shape2d, I32),
+            jax.ShapeDtypeStruct(shape2d, I32),
+            jax.ShapeDtypeStruct(shape2d, I32),
+            jax.ShapeDtypeStruct((bp, 1), F32),
+        ],
+        interpret=interpret,
+    )(
+        step2,
+        ids2,
+        loss2,
+        ema.reshape(shape2d),
+        count.reshape(shape2d),
+        last_seen.reshape(shape2d),
+        owner.reshape(shape2d),
+    )
+    return (
+        ema2.reshape(cap),
+        cnt2.reshape(cap),
+        ls2.reshape(cap),
+        own2.reshape(cap),
+        pri[:b, 0],
+    )

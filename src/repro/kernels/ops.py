@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import decode_attn as _da
+from repro.kernels import ledger as _ledger
 from repro.kernels import ref as _ref
 from repro.kernels import ssd as _ssd
 from repro.kernels import xent as _xent
@@ -98,6 +99,40 @@ def decode_attn(
     if impl == "ref":
         return _ref.decode_attn_ref(q, k, v, valid)
     return _da.decode_attn(q, k, v, valid, interpret=(impl == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# fused recycle-ledger record+priority (no vjp — the ledger is not a
+# differentiable quantity; it is stop_gradient state by construction)
+# ---------------------------------------------------------------------------
+
+
+def ledger_record_priority(
+    ema: jax.Array,
+    count: jax.Array,
+    last_seen: jax.Array,
+    owner: jax.Array,
+    ids: jax.Array,
+    losses: jax.Array,
+    step: jax.Array,
+    *,
+    decay: float,
+    unseen_priority: float,
+    impl: Optional[str] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One-pass ledger transaction -> (ema', count', last_seen', owner', pri)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ledger_record_priority_ref(
+            ema, count, last_seen, owner, ids, losses, step,
+            decay, unseen_priority,
+        )
+    return _ledger.ledger_record_priority(
+        ema, count, last_seen, owner, ids, losses, step,
+        decay=decay,
+        unseen_priority=unseen_priority,
+        interpret=(impl == "interpret"),
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -44,6 +44,51 @@ def decode_attn_ref(
     return out.reshape(b, hq, d).astype(q.dtype)
 
 
+def ledger_record_priority_ref(
+    ema: Array,  # [capacity] f32
+    count: Array,  # [capacity] i32
+    last_seen: Array,  # [capacity] i32
+    owner: Array,  # [capacity] i32
+    ids: Array,  # [B] i32
+    losses: Array,  # [B] f32
+    step: Array,  # scalar i32
+    decay: float,
+    unseen_priority: float,
+) -> tuple[Array, Array, Array, Array, Array]:
+    """Fused ledger record+priority (repro.core.device_ledger semantics).
+
+    Scatter-EMA write with deterministic numpy last-write-wins on intra-batch
+    slot collisions, then the post-update priority of each recorded id
+    (staleness age 0 -> score = fresh EMA; within-batch evictions read back
+    as unseen). Hash must match repro.core.history.slot_for.
+    """
+    from repro.core.device_ledger import slot_for_jnp
+
+    cap = ema.shape[0]
+    i32 = jnp.int32
+    ids = ids.astype(i32)
+    losses = losses.astype(F32)
+    step = jnp.asarray(step).astype(i32)
+    slots = slot_for_jnp(ids, cap)
+
+    fresh = owner[slots] != ids
+    prev = jnp.where(fresh, losses, ema[slots])
+    new_ema = decay * prev + (1.0 - decay) * losses
+    new_count = jnp.where(fresh, 1, count[slots] + 1)
+    order = jnp.arange(ids.shape[0], dtype=i32)
+    last = jnp.full((cap,), -1, i32).at[slots].max(order)
+    tgt = jnp.where(last[slots] == order, slots, cap)  # OOB -> dropped
+    ema2 = ema.at[tgt].set(new_ema, mode="drop")
+    count2 = count.at[tgt].set(new_count, mode="drop")
+    last_seen2 = last_seen.at[tgt].set(
+        jnp.broadcast_to(step, tgt.shape), mode="drop"
+    )
+    owner2 = owner.at[tgt].set(ids, mode="drop")
+    seen = owner2[slots] == ids
+    pri = jnp.where(seen, ema2[slots], unseen_priority).astype(F32)
+    return ema2, count2, last_seen2, owner2, pri
+
+
 def ssd_ref(
     x: Array,  # [B, S, H, P]
     dt: Array,  # [B, S, H] positive

@@ -234,6 +234,11 @@ def _trip_count(cond: Computation) -> int:
 
 def _operand_names(rest: str) -> list[str]:
     """Operand names from 'op(%a, %b.1, ...), attr=...' (args before ')')."""
+    return re.findall(r"%?([\w.\-]+)", _args_region(rest))
+
+
+def _args_region(rest: str) -> str:
+    """The operand list: everything up to the paren matching the opcode's."""
     depth, end = 0, len(rest)
     for i, ch in enumerate(rest):
         if ch == "(":
@@ -243,8 +248,7 @@ def _operand_names(rest: str) -> list[str]:
                 end = i
                 break
             depth -= 1
-    args = rest[:end]
-    return re.findall(r"%?([\w.\-]+)", args)
+    return rest[:end]
 
 
 def _dot_flops(op: Op, symtab: dict[str, str]) -> float:
@@ -253,16 +257,24 @@ def _dot_flops(op: Op, symtab: dict[str, str]) -> float:
         return 0.0
     _, rshape = result[0]
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
-    names = _operand_names(op.rest)
-    if not m or not names:
+    if not m:
         return 2.0 * math.prod(rshape)
-    lhs_type = symtab.get(names[0])
-    if lhs_type is None:
+    # lhs shape: some HLO dialects annotate operands inline
+    # (`dot(f32[M,K]{1,0} %lhs, ...)`); otherwise resolve `%lhs` through
+    # the computation symbol table.
+    lshape = None
+    inline = _parse_shapes(_args_region(op.rest))
+    if inline:
+        lshape = inline[0][1]
+    else:
+        names = _operand_names(op.rest)
+        lhs_type = symtab.get(names[0]) if names else None
+        if lhs_type is not None:
+            lshapes = _parse_shapes(lhs_type)
+            if lshapes:
+                lshape = lshapes[0][1]
+    if lshape is None:
         return 2.0 * math.prod(rshape)
-    lshapes = _parse_shapes(lhs_type)
-    if not lshapes:
-        return 2.0 * math.prod(rshape)
-    _, lshape = lshapes[0]
     k = 1
     for d in m.group(1).split(","):
         if d.strip() != "" and int(d) < len(lshape):

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core.device_ledger import DeviceLedger
 from repro.core.history import LossHistory
 from repro.models import model as Mdl
 from repro.models.params import materialize
@@ -41,6 +42,13 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ledger", default="host", choices=("host", "device"),
+                    help="record outcomes into the host numpy ledger or the "
+                         "device-resident one (no host transfer per record)")
+    ap.add_argument("--ledger-out", default="",
+                    help="save the ledger state_dict as .npz (interchange "
+                         "format shared by host and device ledgers; feed to "
+                         "launch.train --ledger-in for recycle training)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -55,7 +63,7 @@ def main(argv=None) -> int:
         lambda p, c, t, pos: Mdl.decode_step(p, cfg, c, t, pos)
     )
 
-    history = LossHistory()
+    history = DeviceLedger() if args.ledger == "device" else LossHistory()
     toks, ids = sample_batch(rng, cfg, args.batch, args.prompt_len)
 
     t0 = time.time()
@@ -86,7 +94,13 @@ def main(argv=None) -> int:
         picked = jnp.take_along_axis(
             step_logits.astype(jnp.float32), true_next[:, None], axis=-1
         )[:, 0]
-        loss = np.asarray(lse - picked)
+        loss = lse - picked
+        if args.ledger == "device":
+            # jitted scatter into the device table; the loss never leaves
+            # the accelerator on its way to the ledger
+            history.record(jnp.asarray(ids.astype(np.int32)), loss, step)
+            return np.asarray(loss)  # host copy for reporting only
+        loss = np.asarray(loss)
         history.record(ids, loss, step)
         return loss
 
@@ -95,8 +109,11 @@ def main(argv=None) -> int:
     ema, seen = history.lookup(ids)
     print(
         f"recorded serving losses: mean={loss.mean():.3f}; "
-        f"ledger hit rate={seen.mean():.2f}"
+        f"ledger hit rate={np.asarray(seen).mean():.2f}"
     )
+    if args.ledger_out:
+        np.savez(args.ledger_out, **history.state_dict())
+        print(f"ledger saved to {args.ledger_out} ({args.ledger} layout)")
     print("sample generations (token ids):")
     for row in np.asarray(gen[:2, :12]):
         print("  ", row.tolist())

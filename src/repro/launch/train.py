@@ -32,15 +32,19 @@ import numpy as np
 
 from repro import configs
 from repro.checkpoint import CheckpointManager
-from repro.core.history import LossHistory
+from repro.core import device_ledger as dledger
+from repro.core.history import HistoryConfig, LossHistory
 from repro.core.obftf import OBFTFConfig, make_train_step
 from repro.core.selection import SelectionConfig
-from repro.data import DataConfig, Prefetcher, SyntheticLMStream
+from repro.data import DataConfig, Prefetcher, RecycleFeed, SyntheticLMStream
+from repro.distributed.ledger import sharded_ledger_ops
 from repro.distributed.sharding import DEFAULT_RULES, use_rules
 from repro.launch.mesh import make_elastic_mesh, validate_batch
 from repro.launch.specs import state_specs
 from repro.models import model as Mdl
 from repro.models.params import materialize
+
+COLD_LOSS = 1e3  # recorded-loss fallback for ledger misses (cold start)
 
 
 class Watchdog:
@@ -77,6 +81,19 @@ def main(argv=None) -> int:
     ap.add_argument("--ratio", type=float, default=0.25)
     ap.add_argument("--recycle", action="store_true",
                     help="reuse recorded losses as the selection signal")
+    ap.add_argument("--ledger", default="host", choices=("host", "device"),
+                    help="recycle ledger placement: host numpy store with a "
+                         "per-step round-trip, or device-resident (lookup + "
+                         "record fused into the jitted step, no host hop)")
+    ap.add_argument("--ledger-in", default="",
+                    help="warm-start the ledger from an .npz state_dict "
+                         "(e.g. written by launch.serve --ledger-out)")
+    ap.add_argument("--json-out", default="",
+                    help="write a run summary (losses, step cost) as JSON")
+    ap.add_argument("--instance-pool", type=int, default=0,
+                    help="distinct instance ids before the stream repeats "
+                         "(0 = DataConfig default 2^20); small pools make "
+                         "the recycle ledger hit within a smoke run")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -128,11 +145,52 @@ def main(argv=None) -> int:
             start_step = int(state["step"])
             print(f"resumed from step {start_step}")
 
-    stream = SyntheticLMStream(
-        DataConfig(args.global_batch, args.seq_len, cfg.vocab_size,
-                   seed=args.seed)
-    )
-    history = LossHistory()
+    dcfg = DataConfig(args.global_batch, args.seq_len, cfg.vocab_size,
+                      seed=args.seed)
+    if args.instance_pool:
+        if args.instance_pool % args.global_batch:
+            # divisibility keeps each id at a fixed batch offset across pool
+            # wraps — the id->shard pinning the zero-communication sharded
+            # ledger relies on (see repro.distributed.ledger)
+            raise SystemExit(
+                f"--instance-pool {args.instance_pool} must be a multiple "
+                f"of --global-batch {args.global_batch}"
+            )
+        dcfg = dataclasses.replace(dcfg, instance_pool=args.instance_pool)
+    stream = SyntheticLMStream(dcfg)
+    lcfg = HistoryConfig()
+    use_device_ledger = args.recycle and args.ledger == "device"
+    led_ops = led_state = None
+    history = None
+    feed = stream
+    if use_device_ledger:
+        # device-resident ledger: lookup + record fuse into the jitted step
+        # below; the recycle signal never touches the host.
+        if single_device:
+            led_state = dledger.init_state(lcfg)
+        else:
+            led_ops = sharded_ledger_ops(mesh, lcfg, rules.batch_axes)
+            led_state = led_ops.init()
+        if args.ledger_in:
+            if led_ops is not None and led_ops.shards > 1:
+                raise SystemExit(
+                    "--ledger-in uses the global slot layout; a "
+                    f"{led_ops.shards}-shard ledger has its own addressing"
+                )
+            led = dledger.DeviceLedger(lcfg)
+            led.load_state_dict(dict(np.load(args.ledger_in)))
+            led_state = led.state
+            print(f"ledger warm-start from {args.ledger_in} "
+                  f"({int(np.sum(np.asarray(led_state.owner) >= 0))} live slots)")
+    else:
+        history = LossHistory(lcfg)
+        if args.ledger_in:
+            history.load_state_dict(dict(np.load(args.ledger_in)))
+            print(f"ledger warm-start from {args.ledger_in} "
+                  f"({int((history.owner >= 0).sum())} live slots)")
+        if args.recycle:
+            feed = RecycleFeed(stream, history, ledger="host",
+                               cold_loss=COLD_LOSS)
     watchdog = Watchdog()
 
     stop = {"now": False}
@@ -144,34 +202,69 @@ def main(argv=None) -> int:
     signal.signal(signal.SIGTERM, _sigterm)
     signal.signal(signal.SIGINT, _sigterm)
 
-    jit_step = jax.jit(step_fn, out_shardings=(state_sh, None)
-                       if not single_device else None)
+    if use_device_ledger:
+        led_lookup = led_ops.lookup if led_ops else dledger.lookup
+        if led_ops:
+            led_record = led_ops.record
+        else:
+            def led_record(lstate, ids, losses, step):
+                return dledger.record(lcfg, lstate, ids, losses, step)
+
+        def step_with_ledger(state, lstate, batch, rng):
+            """Ledger probe -> OBFTF step -> ledger write, one jit, zero
+            host transfers (the whole point of the device ledger)."""
+            ids = batch["instance_id"]
+            ema, seen = led_lookup(lstate, ids)
+            rec = jnp.where(seen, ema, COLD_LOSS).astype(jnp.float32)
+            state, metrics = step_fn(state, dict(batch, recorded_loss=rec),
+                                     rng)
+            per_inst = jnp.broadcast_to(metrics["loss"], ids.shape)
+            lstate = led_record(lstate, ids, per_inst, state["step"])
+            metrics = dict(metrics, ledger_hits=jnp.mean(
+                seen.astype(jnp.float32)))
+            return state, lstate, metrics
+
+        jit_step = jax.jit(
+            step_with_ledger,
+            out_shardings=(state_sh, None, None)
+            if not single_device else None,
+            donate_argnums=(1,),
+        )
+    else:
+        jit_step = jax.jit(step_fn, out_shardings=(state_sh, None)
+                           if not single_device else None)
     losses_log = []
+    cost_log = []
     with use_rules(mesh, rules):
         for step in range(start_step, args.steps):
             t0 = time.time()
-            raw = stream.batch(step)
+            raw = feed.batch(step)
             batch = {
                 "tokens": jnp.asarray(raw["tokens"]),
                 "labels": jnp.asarray(raw["labels"]),
             }
-            if args.recycle:
-                ema, seen = history.lookup(raw["instance_id"])
-                # fall back to a fresh forward when unseen (cold start)
-                batch["recorded_loss"] = jnp.asarray(
-                    np.where(seen, ema, 1e3)
-                )
             rng, sub = jax.random.split(rng)
-            state, metrics = jit_step(state, batch, sub)
+            if use_device_ledger:
+                batch["instance_id"] = jnp.asarray(
+                    raw["instance_id"].astype(np.int32)
+                )
+                state, led_state, metrics = jit_step(state, led_state,
+                                                     batch, sub)
+            else:
+                if args.recycle:
+                    batch["recorded_loss"] = jnp.asarray(raw["recorded_loss"])
+                state, metrics = jit_step(state, batch, sub)
             metrics = jax.device_get(metrics)
             dt = time.time() - t0
             slow = watchdog.observe(dt)
-            history.record(
-                raw["instance_id"],
-                np.full(raw["instance_id"].shape, float(metrics["loss"])),
-                step,
-            )
+            if history is not None:
+                history.record(
+                    raw["instance_id"],
+                    np.full(raw["instance_id"].shape, float(metrics["loss"])),
+                    step,
+                )
             losses_log.append(float(metrics["loss"]))
+            cost_log.append(float(metrics["step_cost"]))
             if step % args.log_every == 0 or slow:
                 print(
                     f"step {step:5d} loss={metrics['loss']:.4f} "
@@ -188,9 +281,25 @@ def main(argv=None) -> int:
     if ckpt:
         ckpt.save(int(state["step"]), state, block=True)
         print(f"final checkpoint at step {int(state['step'])}")
+    mean_cost = float(np.mean(cost_log)) if cost_log else 0.0
     print(f"done: {len(losses_log)} steps, "
           f"loss {losses_log[0]:.4f} -> {losses_log[-1]:.4f}, "
+          f"step_cost {mean_cost:.3f}C, "
           f"stragglers flagged: {watchdog.flagged}")
+    if args.json_out:
+        summary = {
+            "steps": len(losses_log),
+            "loss_first": losses_log[0],
+            "loss_last": losses_log[-1],
+            "mean_step_cost": mean_cost,
+            "method": args.method,
+            "ratio": args.ratio,
+            "recycle": bool(args.recycle),
+            "ledger": args.ledger,
+            "stragglers": watchdog.flagged,
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(summary, f)
     return 0
 
 

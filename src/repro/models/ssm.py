@@ -112,8 +112,11 @@ def ssd_chunked(
     # ---- intra-chunk (quadratic, MXU-friendly) ----------------------------
     # decay from step j to step i (i >= j): exp(cum_i - cum_j)
     seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Li,Lj,H]
-    causal = jnp.tril(jnp.ones((l, l), bool))
-    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    causal = jnp.tril(jnp.ones((l, l), bool))[None, None, :, :, None]
+    # double-where: above the diagonal seg > 0 and exp overflows at long
+    # chunks; masking only the product would leak NaN through the VJP
+    # (0 * inf), so clamp seg itself in the dead branch too.
+    decay = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
     cb = jnp.einsum("bclhn,bckhn->bclkh", ch, bh)  # C_i . B_j
     att = cb * decay * dtf[:, :, None, :, :]  # weight on x_j
     y_intra = jnp.einsum("bclkh,bckhp->bclhp", att, xf)

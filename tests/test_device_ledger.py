@@ -1,0 +1,278 @@
+"""Device ledger vs host LossHistory: addressing, parity, interchange,
+sharding, and the no-host-hop property."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from _hypothesis_compat import given, settings, st
+from repro.core import device_ledger as dl
+from repro.core.history import HistoryConfig, LossHistory, slot_for
+from repro.distributed.ledger import sharded_ledger_ops
+
+CFG = HistoryConfig(capacity=256, decay=0.7)  # small => real collisions
+
+
+def _i32(a):
+    return jnp.asarray(np.asarray(a).astype(np.int32))
+
+
+def _run_sequence(cfg, n_steps=25, batch=16, id_range=2000, seed=0):
+    """Drive host + device ledgers with the same stream; return both."""
+    h = LossHistory(cfg)
+    d = dl.DeviceLedger(cfg)
+    rng = np.random.default_rng(seed)
+    for step in range(n_steps):
+        ids = rng.integers(0, id_range, size=batch).astype(np.int64)
+        losses = rng.normal(2.0, 1.0, size=batch).astype(np.float32)
+        h.record(ids, losses, step)
+        d.record(ids, losses, step)
+    return h, d, rng
+
+
+# -- addressing --------------------------------------------------------------
+
+
+def test_slot_hash_host_device_identical():
+    """The 32-bit Fibonacci slot hash is bit-identical numpy vs jnp, for
+    small, huge (> 2^32) and sequential ids."""
+    ids = np.concatenate([
+        np.arange(512, dtype=np.int64),
+        np.random.default_rng(0).integers(0, 2**40, size=512),
+    ])
+    for cap in (128, 1 << 16):
+        np.testing.assert_array_equal(
+            slot_for(ids, cap), np.asarray(dl.slot_for_jnp(jnp.asarray(ids.astype(np.int64)), cap))
+        )
+
+
+def test_slot_hash_spreads_sequential_ids():
+    slots = slot_for(np.arange(1000, dtype=np.int64), 1 << 16)
+    assert len(np.unique(slots)) > 990  # near-collision-free spread
+
+
+# -- record / lookup / priority parity ---------------------------------------
+
+
+def test_record_lookup_parity_with_collisions():
+    h, d, rng = _run_sequence(CFG)
+    probe = rng.integers(0, 2000, size=256)
+    he, hs = h.lookup(probe)
+    de, ds = d.lookup(probe)
+    np.testing.assert_array_equal(hs, np.asarray(ds))
+    np.testing.assert_allclose(he, np.asarray(de), rtol=1e-6)
+    # the table itself matches, not just the probed view
+    sd = h.state_dict()
+    np.testing.assert_allclose(np.asarray(d.state.ema), sd["ema"], rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(d.state.owner), sd["owner"])
+    np.testing.assert_array_equal(np.asarray(d.state.count), sd["count"])
+
+
+def test_priority_parity_staleness_and_unseen():
+    h, d, rng = _run_sequence(CFG)
+    probe = rng.integers(0, 4000, size=256)  # half unseen
+    for step in (25, 500, 50_000):  # exercise the staleness boost
+        np.testing.assert_allclose(
+            h.priority(probe, step), np.asarray(d.priority(probe, step)),
+            rtol=1e-5,
+        )
+
+
+def test_intra_batch_duplicate_slot_last_write_wins():
+    """Numpy fancy-assignment semantics: with the same id twice in one
+    batch, the LAST loss wins deterministically — on both ledgers."""
+    cfg = HistoryConfig(capacity=128, decay=0.5)
+    h, d = LossHistory(cfg), dl.DeviceLedger(cfg)
+    ids = np.asarray([7, 9, 7, 7], np.int64)
+    losses = np.asarray([1.0, 2.0, 3.0, 9.0], np.float32)
+    h.record(ids, losses, 0)
+    d.record(ids, losses, 0)
+    np.testing.assert_allclose(h.lookup(np.asarray([7]))[0], [9.0])
+    np.testing.assert_allclose(np.asarray(d.lookup(np.asarray([7]))[0]), [9.0])
+
+
+def test_eviction_resets_count_and_ema():
+    """A colliding id evicts the slot owner (lossy-cache semantics) the
+    same way on both ledgers."""
+    cfg = HistoryConfig(capacity=128, decay=0.5)
+    # find two ids hashing to the same slot
+    ids = np.arange(10_000, dtype=np.int64)
+    slots = slot_for(ids, cfg.capacity)
+    a = 0
+    b = int(ids[1:][slots[1:] == slots[0]][0])
+    h, d = LossHistory(cfg), dl.DeviceLedger(cfg)
+    for led in (h, d):
+        led.record(np.asarray([a]), np.asarray([5.0], np.float32), 0)
+        led.record(np.asarray([b]), np.asarray([1.0], np.float32), 1)
+    for led in (h, d):
+        ema, seen = led.lookup(np.asarray([a, b]))
+        np.testing.assert_array_equal(np.asarray(seen), [False, True])
+        assert float(np.asarray(ema)[1]) == 1.0  # fresh EMA, not blended
+
+
+# -- fused record_priority ---------------------------------------------------
+
+
+def test_fused_record_priority_equals_record_then_priority():
+    h, d, rng = _run_sequence(CFG, n_steps=5)
+    ids = rng.integers(0, 2000, size=16).astype(np.int64)
+    losses = rng.normal(size=16).astype(np.float32)
+    state2, pri = dl.record_priority(CFG, d.state, ids, losses, 99)
+    ref_state = dl.record(CFG, d.state, ids, losses, 99)
+    ref_pri = dl.priority(CFG, ref_state, ids, 99)
+    np.testing.assert_allclose(np.asarray(pri), np.asarray(ref_pri), rtol=1e-6)
+    for got, want in zip(jax.tree.leaves(state2), jax.tree.leaves(ref_state)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -- state_dict interchange ---------------------------------------------------
+
+
+def test_state_dict_roundtrip_host_to_device_to_host():
+    h, d, rng = _run_sequence(CFG)
+    probe = rng.integers(0, 2000, size=128)
+    # host -> device
+    d2 = dl.DeviceLedger.from_host(h)
+    np.testing.assert_allclose(
+        np.asarray(d2.lookup(probe)[0]), h.lookup(probe)[0], rtol=1e-6
+    )
+    # device -> host
+    h2 = d.to_host()
+    np.testing.assert_allclose(h2.lookup(probe)[0], h.lookup(probe)[0], rtol=1e-6)
+    np.testing.assert_allclose(
+        h2.priority(probe, 77), h.priority(probe, 77), rtol=1e-6
+    )
+    # byte-level: the exported dicts agree in the shared interchange format
+    for k, v in h.state_dict().items():
+        np.testing.assert_allclose(d.state_dict()[k], v, rtol=1e-6)
+
+
+def test_state_dict_survives_npz(tmp_path):
+    _, d, rng = _run_sequence(CFG, n_steps=3)
+    path = tmp_path / "ledger.npz"
+    np.savez(path, **d.state_dict())
+    h = LossHistory(CFG)
+    h.load_state_dict(dict(np.load(path)))
+    probe = rng.integers(0, 2000, size=64)
+    np.testing.assert_allclose(
+        h.lookup(probe)[0], np.asarray(d.lookup(probe)[0]), rtol=1e-6
+    )
+
+
+# -- no host hop --------------------------------------------------------------
+
+
+def test_device_ops_are_transfer_free():
+    """The jitted fused step runs under transfer_guard('disallow'):
+    any device->host or host->device copy would raise."""
+    cfg = HistoryConfig(capacity=512)
+    step_fn = jax.jit(
+        lambda st, i, l, s: dl.record_priority(cfg, st, i, l, s),
+        donate_argnums=(0,),
+    )
+    state = dl.init_state(cfg)
+    ids = _i32(np.arange(32))
+    losses = jnp.ones((32,), jnp.float32)
+    steps = [jnp.int32(s) for s in range(3)]
+    state, _ = step_fn(state, ids, losses, steps[0])  # compile outside guard
+    with jax.transfer_guard("disallow"):
+        for s in steps[1:]:
+            state, pri = step_fn(state, ids, losses, s)
+    assert pri.shape == (32,)
+
+
+# -- sharded ledger -----------------------------------------------------------
+
+
+def test_sharded_ops_match_host_single_shard():
+    """On a 1-shard mesh the sharded layout equals the global layout, so the
+    shard_map path must agree with the host ledger exactly."""
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    cfg = HistoryConfig(capacity=512, decay=0.6)
+    ops = sharded_ledger_ops(mesh, cfg, ("data",))
+    st_ = ops.init()
+    h = LossHistory(cfg)
+    rng = np.random.default_rng(3)
+    for step in range(10):
+        ids = rng.integers(0, 3000, size=8).astype(np.int64)
+        losses = rng.normal(1, 1, size=8).astype(np.float32)
+        st_ = ops.record(st_, _i32(ids), jnp.asarray(losses), step)
+        h.record(ids, losses, step)
+    probe = rng.integers(0, 3000, size=64)
+    ema, seen = ops.lookup(st_, _i32(probe))
+    np.testing.assert_array_equal(np.asarray(seen), h.lookup(probe)[1])
+    np.testing.assert_allclose(np.asarray(ema), h.lookup(probe)[0], rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ops.priority(st_, _i32(probe), 12)),
+        h.priority(probe, 12),
+        rtol=1e-6,
+    )
+
+
+def test_sharded_record_priority_fused():
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    cfg = HistoryConfig(capacity=256)
+    ops = sharded_ledger_ops(mesh, cfg, ("data",))
+    st_ = ops.init()
+    ids = _i32(np.asarray([3, 5, 3]))
+    st_, pri = ops.record_priority(st_, ids, jnp.asarray([1.0, 2.0, 4.0]), 0)
+    # post-record priority = fresh EMA (last write wins for the dup id)
+    np.testing.assert_allclose(np.asarray(pri), [4.0, 2.0, 4.0], rtol=1e-6)
+
+
+def test_sharded_capacity_validation():
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    with pytest.raises(ValueError):
+        sharded_ledger_ops(mesh, HistoryConfig(capacity=100), ("data",))
+
+
+# -- property tests (run under CI where hypothesis is installed) --------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    batch=st.integers(1, 32),
+    cap_log2=st.integers(5, 10),
+    steps=st.integers(1, 12),
+)
+def test_property_record_lookup_priority_parity(seed, batch, cap_log2, steps):
+    """For arbitrary record sequences (any collision pattern) the device
+    ledger is indistinguishable from the numpy reference."""
+    cfg = HistoryConfig(capacity=1 << cap_log2, decay=0.8)
+    h = LossHistory(cfg)
+    d = dl.DeviceLedger(cfg)
+    rng = np.random.default_rng(seed)
+    for step in range(steps):
+        ids = rng.integers(0, 4 * cfg.capacity, size=batch).astype(np.int64)
+        losses = rng.normal(0, 3, size=batch).astype(np.float32)
+        h.record(ids, losses, step)
+        d.record(ids, losses, step)
+    probe = rng.integers(0, 4 * cfg.capacity, size=64)
+    np.testing.assert_allclose(
+        h.lookup(probe)[0], np.asarray(d.lookup(probe)[0]), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_array_equal(h.lookup(probe)[1], np.asarray(d.lookup(probe)[1]))
+    np.testing.assert_allclose(
+        h.priority(probe, steps + 3),
+        np.asarray(d.priority(probe, steps + 3)),
+        rtol=1e-5,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_state_dict_roundtrip(seed):
+    cfg = HistoryConfig(capacity=128)
+    h, d = LossHistory(cfg), dl.DeviceLedger(cfg)
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, 1000, size=24).astype(np.int64)
+    losses = rng.normal(size=24).astype(np.float32)
+    h.record(ids, losses, 0)
+    d.record(ids, losses, 0)
+    h2 = dl.DeviceLedger.from_host(h).to_host()
+    for k, v in h.state_dict().items():
+        np.testing.assert_allclose(h2.state_dict()[k], v, rtol=1e-6)

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.compression import (
@@ -132,9 +132,10 @@ def test_int8_ring_all_reduce_matches_psum():
     def f(x):
         return int8_ring_all_reduce(x, "pod")
 
+    from repro.distributed.compat import shard_map
+
     y = jax.jit(
-        jax.shard_map(f, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
-                      check_vma=False)
+        shard_map(f, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"))
     )(x)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
 

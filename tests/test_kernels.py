@@ -178,3 +178,97 @@ def test_ops_dispatch_modes():
         np.testing.assert_allclose(np.asarray(c), np.asarray(a), atol=1e-5)
     finally:
         ops.set_default_impl("ref")
+
+
+# ---------------------------------------------------------------------------
+# fused recycle-ledger record+priority
+# ---------------------------------------------------------------------------
+
+
+def _ledger_state(cap):
+    return (
+        jnp.zeros((cap,), jnp.float32),
+        jnp.zeros((cap,), jnp.int32),
+        jnp.full((cap,), -1, jnp.int32),
+        jnp.full((cap,), -1, jnp.int32),
+    )
+
+
+def _ledger_args(cap, batch, seed, id_range=None):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, id_range or 8 * cap, size=batch).astype(np.int32)
+    losses = rng.normal(2, 1, size=batch).astype(np.float32)
+    return jnp.asarray(ids), jnp.asarray(losses)
+
+
+@pytest.mark.parametrize("cap,batch", [(128, 8), (1024, 16), (4096, 100)])
+def test_ledger_kernel_matches_ref(cap, batch):
+    """One transaction, arbitrary collision pattern: interpret == oracle."""
+    state = _ledger_state(cap)
+    ids, losses = _ledger_args(cap, batch, seed=cap + batch, id_range=cap)
+    kw = dict(decay=0.9, unseen_priority=1e6)
+    want = ops.ledger_record_priority(*state, ids, losses, jnp.int32(3),
+                                      impl="ref", **kw)
+    got = ops.ledger_record_priority(*state, ids, losses, jnp.int32(3),
+                                     impl="interpret", **kw)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_ledger_kernel_chained_transactions():
+    """Multi-step: kernel output feeds the next call; EMA blending, count
+    increments and evictions all match the oracle over time."""
+    cap = 512
+    st_k = st_r = _ledger_state(cap)
+    kw = dict(decay=0.7, unseen_priority=1e6)
+    for step in range(6):
+        ids, losses = _ledger_args(cap, 24, seed=step, id_range=200)
+        out_r = ops.ledger_record_priority(*st_r, ids, losses,
+                                           jnp.int32(step), impl="ref", **kw)
+        out_k = ops.ledger_record_priority(*st_k, ids, losses,
+                                           jnp.int32(step),
+                                           impl="interpret", **kw)
+        st_r, st_k = out_r[:4], out_k[:4]
+        np.testing.assert_allclose(np.asarray(out_k[4]), np.asarray(out_r[4]),
+                                   rtol=1e-5)
+    for g, w in zip(st_k, st_r):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5)
+
+
+def test_ledger_kernel_intra_batch_duplicates():
+    """Same id three times in one batch: numpy last-write-wins semantics,
+    and the dup items all read the winner's post-update priority."""
+    state = _ledger_state(128)
+    ids = jnp.asarray([5, 9, 5, 5], jnp.int32)
+    losses = jnp.asarray([1.0, 2.0, 3.0, 8.0], jnp.float32)
+    kw = dict(decay=0.5, unseen_priority=1e6)
+    for impl in ("ref", "interpret"):
+        ema, cnt, ls, own, pri = ops.ledger_record_priority(
+            *state, ids, losses, jnp.int32(0), impl=impl, **kw)
+        np.testing.assert_allclose(np.asarray(pri), [8.0, 2.0, 8.0, 8.0],
+                                   rtol=1e-6)
+
+
+def test_ledger_kernel_matches_host_ledger():
+    """Full-stack agreement: Pallas interpret kernel == numpy LossHistory."""
+    from repro.core.history import HistoryConfig, LossHistory
+
+    cfg = HistoryConfig(capacity=1024, decay=0.8)
+    h = LossHistory(cfg)
+    state = _ledger_state(cfg.capacity)
+    kw = dict(decay=cfg.decay, unseen_priority=cfg.unseen_priority)
+    for step in range(4):
+        ids, losses = _ledger_args(cfg.capacity, 13, seed=step, id_range=5000)
+        h.record(np.asarray(ids, np.int64), np.asarray(losses), step)
+        out = ops.ledger_record_priority(*state, ids, losses, jnp.int32(step),
+                                         impl="interpret", **kw)
+        state = out[:4]
+        np.testing.assert_allclose(
+            np.asarray(out[4]), h.priority(np.asarray(ids, np.int64), step),
+            rtol=1e-5,
+        )
+    sd = h.state_dict()
+    np.testing.assert_allclose(np.asarray(state[0]), sd["ema"], rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(state[3]),
+                                  sd["owner"].astype(np.int32))

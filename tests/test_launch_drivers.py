@@ -10,7 +10,12 @@ import time
 import pytest
 
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
-CWD = "/root/repo"
+# Propagate backend selection: in a container with an accelerator toolchain
+# but no accelerator, a driver subprocess without JAX_PLATFORMS hangs at
+# jax backend init instead of falling back to CPU.
+if "JAX_PLATFORMS" in os.environ:
+    ENV["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
+CWD = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _run(args, timeout=600):
