@@ -89,24 +89,12 @@ def bench_ledger_host(capacity: int, batch: int, trials: int) -> float:
     return (time.perf_counter() - t0) / trials * 1e6
 
 
-def bench_ledger_device(
-    capacity: int, batch: int, trials: int, impl: str
-) -> float:
-    """Fused record+priority, one jit, donated state. The timed loop runs
-    under transfer_guard("disallow"): any per-step host hop would raise."""
-    from repro.core.device_ledger import init_state, record_priority
-    from repro.core.history import HistoryConfig
-
-    cfg = HistoryConfig(capacity=capacity)
-    step_fn = jax.jit(
-        lambda st, i, l, s: record_priority(cfg, st, i, l, s, impl=impl),
-        donate_argnums=(0,),
-    )
+def _timed_ledger_loop(step_fn, state, capacity, batch, trials) -> float:
+    """Shared harness for the device paths: stage every input on device up
+    front, compile once, then time under transfer_guard("disallow") — any
+    per-step host hop would raise. One methodology, so the rows compare."""
     ids, losses = _ledger_inputs(capacity, batch)
     ids = jnp.asarray(ids.astype(np.int32))
-    state = init_state(cfg)
-    # stage every input on device up front; the guard then proves the step
-    # itself is transfer-free
     steps = [jnp.int32(s) for s in range(trials + 1)]
     state, pri = step_fn(state, ids, losses, steps[0])  # compile
     jax.block_until_ready((state, pri))
@@ -116,6 +104,41 @@ def bench_ledger_device(
             state, pri = step_fn(state, ids, losses, steps[step])
         jax.block_until_ready((state, pri))
     return (time.perf_counter() - t0) / trials * 1e6
+
+
+def bench_ledger_device(
+    capacity: int, batch: int, trials: int, impl: str
+) -> float:
+    """Fused record+priority, one jit, donated state."""
+    from repro.core.device_ledger import init_state, record_priority
+    from repro.core.history import HistoryConfig
+
+    cfg = HistoryConfig(capacity=capacity)
+    step_fn = jax.jit(
+        lambda st, i, l, s: record_priority(cfg, st, i, l, s, impl=impl),
+        donate_argnums=(0,),
+    )
+    return _timed_ledger_loop(step_fn, init_state(cfg), capacity, batch,
+                              trials)
+
+
+def bench_ledger_routed(capacity: int, batch: int, trials: int) -> float:
+    """The routed sharded path (shard_map + cross-shard exchange before
+    the table visit). Off a multi-chip mesh the exchange degenerates to
+    identity, so this times the routing machinery's overhead, not a
+    network; the row exists to keep the routed code path exercised and
+    its dispatch cost visible."""
+    from repro.core.history import HistoryConfig
+    from repro.distributed.ledger import sharded_ledger_ops
+    from repro.launch.mesh import make_elastic_mesh
+
+    cfg = HistoryConfig(capacity=capacity)
+    ops = sharded_ledger_ops(make_elastic_mesh(), cfg, ("data",), route=True)
+    step_fn = jax.jit(
+        lambda st, i, l, s: ops.record_priority(st, i, l, s),
+        donate_argnums=(0,),
+    )
+    return _timed_ledger_loop(step_fn, ops.init(), capacity, batch, trials)
 
 
 def main_ledger(fast: bool = False) -> list[str]:
@@ -128,6 +151,8 @@ def main_ledger(fast: bool = False) -> list[str]:
         ("host", lambda: bench_ledger_host(capacity, batch, trials)),
         ("device", lambda: bench_ledger_device(capacity, batch, trials,
                                                "ref")),
+        ("device[routed]",
+         lambda: bench_ledger_routed(capacity, batch, trials)),
         (f"pallas[{pallas_impl}]",
          lambda: bench_ledger_device(capacity, batch,
                                      max(3, trials // 10), pallas_impl)),

@@ -2,5 +2,6 @@ from repro.checkpoint.manager import (  # noqa: F401
     CheckpointManager,
     latest_step,
     load_checkpoint,
+    load_ledger,
     save_checkpoint,
 )

@@ -42,8 +42,23 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     return flat
 
 
-def save_checkpoint(directory: str, step: int, state: Any) -> str:
-    """Synchronous atomic save. Returns the final checkpoint path."""
+LEDGER_FILE = "ledger.npz"
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    state: Any,
+    ledger: Optional[dict[str, np.ndarray]] = None,
+) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path.
+
+    ``ledger`` is an optional recycle-ledger ``state_dict`` (the host
+    interchange format shared with ``serve --ledger-out`` / ``train
+    --ledger-in``); it is written as ``ledger.npz`` inside the checkpoint
+    directory and covered by the same manifest-last atomicity, so
+    ``--resume`` restores the recycle signal along with the params.
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:010d}")
     tmp = final + ".tmp"
@@ -60,6 +75,9 @@ def save_checkpoint(directory: str, step: int, state: Any) -> str:
             "shape": list(arr.shape),
             "dtype": str(arr.dtype),
         }
+    if ledger is not None:
+        np.savez(os.path.join(tmp, LEDGER_FILE), **ledger)
+        manifest["ledger"] = LEDGER_FILE
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
@@ -77,10 +95,10 @@ def _is_complete(path: str) -> bool:
     try:
         with open(mpath) as f:
             manifest = json.load(f)
-        return all(
-            os.path.exists(os.path.join(path, leaf["file"]))
-            for leaf in manifest["leaves"].values()
-        )
+        files = [leaf["file"] for leaf in manifest["leaves"].values()]
+        if "ledger" in manifest:
+            files.append(manifest["ledger"])
+        return all(os.path.exists(os.path.join(path, f)) for f in files)
     except (json.JSONDecodeError, KeyError, OSError):
         return False
 
@@ -123,6 +141,18 @@ def load_checkpoint(
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def load_ledger(directory: str, step: int) -> Optional[dict[str, np.ndarray]]:
+    """The checkpoint's recycle-ledger state_dict, or None if the save
+    carried no ledger (pre-ledger checkpoints restore params-only)."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if "ledger" not in manifest:
+        return None
+    with np.load(os.path.join(path, manifest["ledger"])) as z:
+        return dict(z)
+
+
 class CheckpointManager:
     """Async keep-k checkpointing with torn-save garbage collection."""
 
@@ -136,13 +166,23 @@ class CheckpointManager:
             if name.endswith(".tmp"):
                 shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
 
-    def save(self, step: int, state: Any, block: bool = False) -> None:
+    def save(
+        self,
+        step: int,
+        state: Any,
+        block: bool = False,
+        ledger: Optional[dict[str, np.ndarray]] = None,
+    ) -> None:
         self.wait()  # one in-flight save; join the previous
         host_state = jax.tree.map(np.asarray, state)  # fetch before async
+        if ledger is not None:
+            # snapshot NOW: a host-side ledger keeps mutating these arrays
+            # in place while the save thread runs (np.asarray would alias)
+            ledger = {k: np.array(v) for k, v in ledger.items()}
 
         def work():
             try:
-                save_checkpoint(self.directory, step, host_state)
+                save_checkpoint(self.directory, step, host_state, ledger)
                 self._prune()
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
@@ -178,3 +218,6 @@ class CheckpointManager:
 
     def restore(self, step: int, target: Any, put=None) -> Any:
         return load_checkpoint(self.directory, step, target, put)
+
+    def restore_ledger(self, step: int) -> Optional[dict[str, np.ndarray]]:
+        return load_ledger(self.directory, step)

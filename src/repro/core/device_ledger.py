@@ -30,7 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.history import FIB32, HistoryConfig, LossHistory, slot_for
+from repro.core.history import (  # noqa: F401  (rehash re-exported: it is
+    FIB32,  # the migration half of this module's state_dict interchange)
+    HistoryConfig,
+    LossHistory,
+    rehash_state_dict,
+    slot_for,
+)
 
 Array = jax.Array
 I32 = jnp.int32
@@ -85,16 +91,30 @@ def slot_for_jnp(ids: Array, capacity: int) -> Array:
 def _winner_mask(slots: Array, capacity: int) -> Array:
     """True for the last batch item targeting each slot (numpy fancy-index
     semantics: with duplicate slots the last write wins, deterministically —
-    plain ``.at[].set`` with duplicates is unspecified in XLA)."""
+    plain ``.at[].set`` with duplicates is unspecified in XLA). Items whose
+    slot is already OOB (masked-out writes) never win."""
     order = jnp.arange(slots.shape[0], dtype=I32)
-    last = jnp.full((capacity,), -1, I32).at[slots].max(order)
-    return last[slots] == order
+    last = jnp.full((capacity,), -1, I32).at[slots].max(order, mode="drop")
+    return (slots < capacity) & (last[slots] == order)
 
 
 def record(
-    cfg: HistoryConfig, state: LedgerState, ids: Array, losses: Array, step
+    cfg: HistoryConfig,
+    state: LedgerState,
+    ids: Array,
+    losses: Array,
+    step,
+    valid: Optional[Array] = None,
 ) -> LedgerState:
-    """Pure scatter-EMA write; semantics identical to ``LossHistory.record``."""
+    """Pure scatter-EMA write; semantics identical to ``LossHistory.record``.
+
+    ``valid`` (bool [B], optional) drops masked-out items entirely — they
+    neither write nor participate in intra-batch last-write-wins. Equivalent
+    to recording only the valid subset, with static shapes (needed both for
+    "record only the fresh per-example losses" at train time and for the
+    routed sharded ledger, where each shard records only the ids homed to
+    it out of a globally gathered batch).
+    """
     ids = jnp.asarray(ids).astype(I32)
     losses = jnp.asarray(losses).astype(F32)
     slots = slot_for_jnp(ids, state.capacity)
@@ -103,6 +123,10 @@ def record(
     prev = jnp.where(fresh, losses, state.ema[slots])
     new_ema = d * prev + (1.0 - d) * losses
     new_count = jnp.where(fresh, 1, state.count[slots] + 1)
+    if valid is not None:
+        # invalid items hash OOB: dropped by the scatter AND by the winner
+        # computation (a masked write must not shadow a valid one)
+        slots = jnp.where(jnp.asarray(valid, bool), slots, state.capacity)
     keep = _winner_mask(slots, state.capacity)
     tgt = jnp.where(keep, slots, state.capacity)  # OOB scatters are dropped
     step32 = jnp.asarray(step).astype(I32)
@@ -142,12 +166,14 @@ def record_priority(
     ids: Array,
     losses: Array,
     step,
+    valid: Optional[Array] = None,
     impl: Optional[str] = None,
 ) -> tuple[LedgerState, Array]:
     """Fused write+score: record the batch, return post-record priorities.
 
-    Equivalent to ``record`` followed by ``priority`` at the same step, in
-    one pass (one hash, one table visit). ``impl`` selects the backend as in
+    Equivalent to ``record`` (honoring the optional ``valid`` write mask)
+    followed by ``priority`` over ALL ids at the same step, in one pass
+    (one hash, one table visit). ``impl`` selects the backend as in
     ``repro.kernels.ops`` ("ref" = the jnp path below, "pallas"/"interpret"
     = the fused Pallas kernel).
     """
@@ -164,11 +190,35 @@ def record_priority(
             jnp.asarray(step).astype(I32),
             decay=cfg.decay,
             unseen_priority=cfg.unseen_priority,
+            staleness_half_life=cfg.staleness_half_life,
+            valid=valid,
             impl=impl,
         )
         return LedgerState(ema, count, last_seen, owner), pri
-    new = record(cfg, state, ids, losses, step)
+    new = record(cfg, state, ids, losses, step, valid=valid)
     return new, priority(cfg, new, ids, step)
+
+
+def state_dict_of(state: LedgerState) -> dict[str, np.ndarray]:
+    """Export a ``LedgerState`` in the ``LossHistory`` checkpoint format
+    (int64 host dtypes) — the .npz interchange shared by serve's
+    ``--ledger-out``, train's ``--ledger-in`` and checkpoint restore."""
+    return {
+        "ema": np.asarray(state.ema, np.float32),
+        "count": np.asarray(state.count, np.int64),
+        "last_seen": np.asarray(state.last_seen, np.int64),
+        "owner": np.asarray(state.owner, np.int64),
+    }
+
+
+def state_from_dict(sd: dict[str, np.ndarray]) -> LedgerState:
+    """Load the host interchange format back into device arrays."""
+    return LedgerState(
+        ema=jnp.asarray(np.asarray(sd["ema"], np.float32)),
+        count=jnp.asarray(np.asarray(sd["count"]).astype(np.int32)),
+        last_seen=jnp.asarray(np.asarray(sd["last_seen"]).astype(np.int32)),
+        owner=jnp.asarray(np.asarray(sd["owner"]).astype(np.int32)),
+    )
 
 
 class DeviceLedger:
@@ -188,8 +238,8 @@ class DeviceLedger:
 
     # -- LossHistory-compatible surface ------------------------------------
 
-    def record(self, ids, losses, step) -> None:
-        self.state = self._record(self.state, ids, losses, step)
+    def record(self, ids, losses, step, valid=None) -> None:
+        self.state = self._record(self.state, ids, losses, step, valid)
 
     def lookup(self, ids) -> tuple[Array, Array]:
         return self._lookup(self.state, ids)
@@ -197,9 +247,9 @@ class DeviceLedger:
     def priority(self, ids, step) -> Array:
         return self._priority(self.state, ids, step)
 
-    def record_priority(self, ids, losses, step, impl=None) -> Array:
+    def record_priority(self, ids, losses, step, valid=None, impl=None) -> Array:
         self.state, pri = record_priority(
-            self.cfg, self.state, ids, losses, step, impl=impl
+            self.cfg, self.state, ids, losses, step, valid=valid, impl=impl
         )
         return pri
 
@@ -207,22 +257,15 @@ class DeviceLedger:
 
     def state_dict(self) -> dict[str, np.ndarray]:
         """Export in the ``LossHistory`` checkpoint format (int64 host dtypes)."""
-        return {
-            "ema": np.asarray(self.state.ema, np.float32),
-            "count": np.asarray(self.state.count, np.int64),
-            "last_seen": np.asarray(self.state.last_seen, np.int64),
-            "owner": np.asarray(self.state.owner, np.int64),
-        }
+        return state_dict_of(self.state)
 
     def load_state_dict(self, state: dict[str, np.ndarray]) -> None:
+        state = dict(state)
+        foreign = state.pop("pinned_shards", None) is not None
         n = np.asarray(state["ema"]).shape[0]
-        assert n == self.cfg.capacity, (n, self.cfg.capacity)
-        self.state = LedgerState(
-            ema=jnp.asarray(np.asarray(state["ema"], np.float32)),
-            count=jnp.asarray(np.asarray(state["count"]).astype(np.int32)),
-            last_seen=jnp.asarray(np.asarray(state["last_seen"]).astype(np.int32)),
-            owner=jnp.asarray(np.asarray(state["owner"]).astype(np.int32)),
-        )
+        if foreign or n != self.cfg.capacity:  # layout change: re-hash
+            state = rehash_state_dict(state, self.cfg.capacity)
+        self.state = state_from_dict(state)
 
     @classmethod
     def from_host(cls, history: LossHistory) -> "DeviceLedger":

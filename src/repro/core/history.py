@@ -39,6 +39,46 @@ def slot_for(ids: np.ndarray, capacity: int) -> np.ndarray:
     return (h & np.uint32(capacity - 1)).astype(np.int64)
 
 
+def rehash_state_dict(
+    sd: dict[str, np.ndarray], new_capacity: int
+) -> dict[str, np.ndarray]:
+    """Re-hash a ledger ``state_dict`` into a new slot layout (host-side).
+
+    The input is treated as a bag of live records (slot positions are
+    ignored except for tie-breaking), so this one function covers every
+    layout migration: global -> global on a capacity change, and the merge
+    of per-shard local tables into the global layout on a shard-count
+    change (concatenate the local state_dicts, then rehash — see
+    ``repro.distributed.ledger.merge_shard_state_dicts``).
+
+    Records colliding in the new layout evict deterministically by recency:
+    the largest ``last_seen`` wins, ties broken by input slot order —
+    matching the ledger's lossy-cache semantics (eviction = back to unseen).
+    """
+    assert new_capacity & (new_capacity - 1) == 0, "capacity must be 2^k"
+    owner = np.asarray(sd["owner"], np.int64)
+    live = owner >= 0
+    ids = owner[live]
+    out = {
+        "ema": np.zeros((new_capacity,), np.float32),
+        "count": np.zeros((new_capacity,), np.int64),
+        "last_seen": np.full((new_capacity,), -1, np.int64),
+        "owner": np.full((new_capacity,), -1, np.int64),
+    }
+    if ids.size == 0:
+        return out
+    last_seen = np.asarray(sd["last_seen"], np.int64)[live]
+    # numpy fancy assignment: the LAST duplicate index wins, so writing in
+    # ascending last_seen order makes the most recent record survive.
+    order = np.argsort(last_seen, kind="stable")
+    slots = slot_for(ids, new_capacity)[order]
+    out["ema"][slots] = np.asarray(sd["ema"], np.float32)[live][order]
+    out["count"][slots] = np.asarray(sd["count"], np.int64)[live][order]
+    out["last_seen"][slots] = last_seen[order]
+    out["owner"][slots] = ids[order]
+    return out
+
+
 @dataclasses.dataclass
 class HistoryConfig:
     capacity: int = 1 << 16  # slots (power of two)
@@ -129,6 +169,13 @@ class LossHistory:
         }
 
     def load_state_dict(self, state: dict[str, np.ndarray]) -> None:
+        state = dict(state)
+        # a sharded-pinned export's slot placement is foreign (records sit
+        # on consumer shards); re-hash it — and any capacity mismatch —
+        # into this table's layout
+        foreign = state.pop("pinned_shards", None) is not None
+        if foreign or np.asarray(state["ema"]).shape[0] != self.cfg.capacity:
+            state = rehash_state_dict(state, self.cfg.capacity)
         self.ema = np.asarray(state["ema"], np.float32).copy()
         self.count = np.asarray(state["count"], np.int64).copy()
         self.last_seen = np.asarray(state["last_seen"], np.int64).copy()

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.selection import SelectionConfig, select
-from repro.distributed.compat import axis_size, shard_map
+from repro.distributed.compat import linear_axis_index, shard_map
 from repro.optim import Optimizer, apply_updates, global_norm
 
 Array = jax.Array
@@ -69,13 +69,6 @@ def _dp_shard_count(mesh: Mesh, dp_axes: Sequence[str]) -> int:
     return n
 
 
-def _linear_dp_index(dp_axes: Sequence[str]) -> Array:
-    idx = jnp.zeros((), jnp.int32)
-    for a in dp_axes:
-        idx = idx * axis_size(a) + jax.lax.axis_index(a)
-    return idx
-
-
 def _batch_specs(batch: Batch, dp: P | None) -> Any:
     spec = lambda x: P(dp, *([None] * (x.ndim - 1)))
     return jax.tree.map(spec, batch)
@@ -93,7 +86,10 @@ def select_and_gather(
     """Steps 6-7 of Algorithm 1. Returns (sub_batch, local_indices, sel_losses).
 
     With a mesh, runs per data-shard inside shard_map (zero communication);
-    without one, selects over the full batch.
+    without one, selects over the full batch. The returned indices are
+    *global* batch positions in both cases (per-shard picks are offset by
+    the shard's slice start), so callers can scatter per-example results
+    back into [n]-aligned arrays.
     """
     n = losses.shape[0]
 
@@ -110,10 +106,11 @@ def select_and_gather(
     b_local = cfg.budget(n_local)
 
     def local(losses_l: Array, batch_l: Batch, rng_g: Array):
-        rng_l = jax.random.fold_in(rng_g, _linear_dp_index(dp_axes))
+        me = linear_axis_index(dp_axes)
+        rng_l = jax.random.fold_in(rng_g, me)
         idx = select(cfg, rng_l, losses_l.astype(jnp.float32), b_local)
         sub = jax.tree.map(lambda x: x[idx], batch_l)
-        return sub, idx, losses_l[idx]
+        return sub, idx + me * n_local, losses_l[idx]
 
     dp = P(tuple(dp_axes))
     fn = shard_map(
@@ -153,12 +150,17 @@ def make_train_step(
 
         if cfg.mode == "full":
             def mean_loss(p):
-                return jnp.mean(per_example_loss_fn(p, inputs, rng_bwd))
+                pel = per_example_loss_fn(p, inputs, rng_bwd)
+                return jnp.mean(pel), pel
 
-            loss, grads = jax.value_and_grad(mean_loss)(params)
+            (loss, per_example), grads = jax.value_and_grad(
+                mean_loss, has_aux=True
+            )(params)
+            per_example = jax.lax.stop_gradient(per_example).astype(jnp.float32)
             sel_losses = jnp.full((1,), loss)
             residual = jnp.zeros(())
             n = next(iter(inputs.values())).shape[0]
+            per_example_fresh = jnp.ones((n,), bool)
             kept = jnp.asarray(n, jnp.float32)
             step_cost = jnp.asarray(3.0, jnp.float32)  # fwd + bwd on all n
         else:
@@ -173,7 +175,7 @@ def make_train_step(
             n = losses.shape[0]
 
             # 6-7: subset selection, shard-local under the mesh.
-            sub_batch, _, sel_losses = select_and_gather(
+            sub_batch, sel_idx, sel_losses = select_and_gather(
                 sel,
                 rng_sel,
                 losses,
@@ -191,11 +193,28 @@ def make_train_step(
             # dropping below 1: one backward from ten already-paid forwards.
             step_cost = (0.0 if recycled else 1.0) + 3.0 * kept / n
 
-            # 8: one backward on the kept subset only.
+            # 8: one backward on the kept subset only. The per-example
+            # losses of the kept subset fall out of the same forward.
             def mean_loss(p):
-                return jnp.mean(per_example_loss_fn(p, sub_inputs, rng_bwd))
+                pel = per_example_loss_fn(p, sub_inputs, rng_bwd)
+                return jnp.mean(pel), pel
 
-            loss, grads = jax.value_and_grad(mean_loss)(params)
+            (loss, sub_losses), grads = jax.value_and_grad(
+                mean_loss, has_aux=True
+            )(params)
+            # Per-example signal aligned to the in-batch index: the selection
+            # forward's losses for the whole batch, overwritten at the kept
+            # positions with the backward forward's values. When recycled,
+            # only the kept subset carries a loss computed THIS step — the
+            # rest is the replayed record; `per_example_fresh` marks which is
+            # which so the recycle ledger can record only true observations.
+            sub_losses = jax.lax.stop_gradient(sub_losses).astype(jnp.float32)
+            per_example = losses.at[sel_idx].set(sub_losses)
+            per_example_fresh = (
+                jnp.zeros((n,), bool).at[sel_idx].set(True)
+                if recycled
+                else jnp.ones((n,), bool)
+            )
 
         updates, opt_state = optimizer.update(grads, state["opt"], params)
         new_params = apply_updates(params, updates)
@@ -211,6 +230,11 @@ def make_train_step(
             "kept": kept,
             "step_cost": step_cost,
             "grad_norm": global_norm(updates),
+            # True per-instance signals, aligned to the in-batch index (the
+            # paper's "constant amount of information per instance") — NOT
+            # the batch mean. `fresh` marks entries computed this step.
+            "per_example_loss": per_example,
+            "per_example_fresh": per_example_fresh,
         }
         return new_state, metrics
 

@@ -37,6 +37,12 @@ class DataConfig:
     seed: int = 0
     outlier_frac: float = 0.0  # fraction of pure-noise instances
     instance_pool: int = 1 << 20  # distinct instance ids before reuse
+    # True: each id always lands on the same data shard (a feed keyed by a
+    # stable partitioner — what the zero-communication sharded ledger
+    # assumes). False: the id->shard assignment rotates every step, the
+    # adversarial case for shard-local state; the routed ledger
+    # (repro.distributed.ledger, route=True) exists for exactly this feed.
+    pin_shards: bool = True
 
 
 class SyntheticLMStream:
@@ -57,9 +63,18 @@ class SyntheticLMStream:
         )
 
     def instance_ids(self, step: int) -> np.ndarray:
-        """Global ids for batch `step` on this shard (disjoint across shards)."""
+        """Global ids for batch `step` on this shard (disjoint across shards).
+
+        With ``pin_shards=False`` the global batch is rotated by one shard
+        slice per step before slicing, so every id cycles through all the
+        shards over time (deterministic and restart-exact, like the pinned
+        layout — only the id->shard assignment moves).
+        """
         base = (step * self.cfg.global_batch) % self.cfg.instance_pool
-        start = base + self.shard * self.local_batch
+        shard = self.shard
+        if not self.cfg.pin_shards:
+            shard = (self.shard + step) % self.num_shards
+        start = base + shard * self.local_batch
         return (np.arange(self.local_batch, dtype=np.int64) + start) % (
             self.cfg.instance_pool
         )
@@ -137,6 +152,8 @@ class RecycleFeed:
             raw["recorded_loss"] = np.where(
                 seen, ema, self.cold_loss
             ).astype(np.float32)
+            # observability: fraction of the batch the ledger could answer
+            raw["ledger_hit_rate"] = float(seen.mean())
         return raw
 
     def __iter__(self) -> Iterator[dict[str, np.ndarray]]:

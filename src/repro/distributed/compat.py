@@ -21,6 +21,20 @@ def axis_size(name: str) -> int:
 
     return _core.axis_frame(name)
 
+
+def linear_axis_index(axes):
+    """This shard's rank in the row-major flattening of ``axes`` (inside
+    shard_map). Matches the segment order of tiled collectives
+    (``all_gather(..., tiled=True)``) and of a global batch sharded over
+    the same axes — the alignment both shard-local selection and ledger
+    routing depend on."""
+    import jax.numpy as jnp
+
+    idx = jnp.zeros((), jnp.int32)
+    for a in axes:
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
 if hasattr(jax, "shard_map"):
 
     def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):

@@ -2,22 +2,35 @@
 
 The device ledger (`repro.core.device_ledger`) holds one [capacity] table.
 At scale that table should grow with the fleet, not with one chip's HBM:
-here the table is laid out along the data axes — shard s owns slots
-[s*C/S, (s+1)*C/S) as a *local* hash table of capacity C/S — and every
-ledger op runs inside ``shard_map`` over those axes. Ids hash into the
-local slice, so ``record``/``lookup``/``priority`` are zero-communication:
-an instance's record lives on the shard that consumed it, which is exactly
-the shard that will see it again (the synthetic pipeline pins each id to a
-fixed shard, matching a production feed keyed by a stable partitioner).
+here the table is laid out along the data axes — shard s owns a
+[C/S]-slot slice — and every ledger op runs inside ``shard_map`` over
+those axes. Total capacity scales linearly with the data-parallel degree
+and the recycle signal never touches the host. Two id-placement modes:
 
-Total capacity therefore scales linearly with the data-parallel degree,
-and the recycle signal never crosses a shard boundary or touches the host
-— the same decomposition argument as shard-local OBFTF selection.
+* **pinned** (``route=False``): ids hash into the shard-local slice, so
+  ``record``/``lookup``/``priority`` are zero-communication — an
+  instance's record lives on the shard that consumed it, which is exactly
+  the shard that will see it again *when the feed pins each id to a fixed
+  data shard* (a production feed keyed by a stable partitioner).
 
-Note the addressing consequence: a sharded ledger's slot layout differs
-from the host/global layout (local capacity C/S), so its ``state_dict`` is
-its own interchange format. Use per-shard ``DeviceLedger`` round-trips when
-migrating between layouts.
+* **routed** (``route=True``): before the local table visit, each batch
+  item is exchanged to the shard that owns its GLOBAL slot —
+  ``home = slot_for(id, C) // (C/S)`` — so feeds that do NOT pin
+  instances to a shard still hit their records. The exchange is an
+  all-to-all by home shard, realized as all_gather + home-mask (exact for
+  arbitrarily imbalanced hash distributions; answers return to the
+  requesting shard via a masked psum). Routing makes the sharded table
+  bit-identical to the single global table: shard s's slice IS global
+  slots [s*C/S, (s+1)*C/S) — because ``slot_for(id, C/S)`` equals
+  ``slot_for(id, C) mod C/S``, the local hash lands every routed record
+  at its global offset.
+
+The addressing consequence: a *routed* sharded ledger's ``state_dict`` is
+the plain global interchange format (concatenation of the slices), and
+migrating between shard counts is a lossless reshape. A *pinned* ledger's
+records sit on consumer shards instead of hash-home shards, so exporting
+one re-hashes every record into the global layout (recency wins on
+collisions) — see ``merge_shard_state_dicts`` / ``split_state_dict``.
 """
 
 from __future__ import annotations
@@ -27,6 +40,7 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.device_ledger import (
@@ -36,9 +50,15 @@ from repro.core.device_ledger import (
     priority,
     record,
     record_priority,
+    rehash_state_dict,
+    slot_for_jnp,
+    state_dict_of,
+    state_from_dict,
 )
 from repro.core.history import HistoryConfig
-from repro.distributed.compat import shard_map
+from repro.distributed.compat import linear_axis_index, shard_map
+
+I32 = jnp.int32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,13 +68,15 @@ class ShardedLedgerOps:
     All entry points take/return a ``LedgerState`` whose arrays are sharded
     ``P(dp_axes)`` along the slot axis; ids/losses are sharded the same way
     along the batch axis. Fuse these into a jitted train step — nothing
-    here ever leaves the device.
+    here ever leaves the device. With ``route=True`` every op first
+    exchanges batch items to their home shard (see module docstring).
     """
 
     mesh: Mesh
     dp_axes: tuple[str, ...]
     cfg: HistoryConfig  # global config; capacity = global slots
     local_cfg: HistoryConfig  # per-shard slice config
+    route: bool = False
 
     @property
     def shards(self) -> int:
@@ -71,6 +93,35 @@ class ShardedLedgerOps:
             fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs
         )
 
+    # -- routing helpers (traced inside shard_map) --------------------------
+
+    def _home(self, ids: jax.Array) -> jax.Array:
+        """Global-layout owner shard of each id: slot_for(id, C) // (C/S)."""
+        return slot_for_jnp(ids, self.cfg.capacity) // self.local_cfg.capacity
+
+    def _exchange(self, *per_shard: jax.Array):
+        """The routing hop: gather every shard's batch (tiled, shard-major
+        — the global batch order) and mark the items homed to this shard."""
+        ax = tuple(self.dp_axes)
+        gathered = [
+            jax.lax.all_gather(x, ax, tiled=True) for x in per_shard
+        ]
+        mine = self._home(gathered[0]) == linear_axis_index(self.dp_axes)
+        return (*gathered, mine)
+
+    def _return_route(self, values: jax.Array, mine: jax.Array, b: int):
+        """Send each answer back to the shard that asked: exactly one shard
+        has ``mine`` set per item, so a masked psum is the inverse
+        exchange; then slice this shard's segment of the global batch."""
+        zero = jnp.zeros((), values.dtype)
+        total = jax.lax.psum(
+            jnp.where(mine, values, zero), tuple(self.dp_axes)
+        )
+        start = linear_axis_index(self.dp_axes) * b
+        return jax.lax.dynamic_slice(total, (start,), (b,))
+
+    # -- ops ----------------------------------------------------------------
+
     def init(self) -> LedgerState:
         """Global [capacity] state, placed sharded over the slot axis."""
         sh = NamedSharding(self.mesh, P(tuple(self.dp_axes)))
@@ -78,49 +129,149 @@ class ShardedLedgerOps:
             lambda x: jax.device_put(x, sh), init_state(self.cfg)
         )
 
-    def record(self, state: LedgerState, ids, losses, step) -> LedgerState:
+    def record(
+        self, state: LedgerState, ids, losses, step, valid=None
+    ) -> LedgerState:
         dp = P(tuple(self.dp_axes))
         state_spec = LedgerState(dp, dp, dp, dp)
-        fn = self._wrap(
-            lambda st, i, l, s: record(self.local_cfg, st, i, l, s),
-            2,
-            state_spec,
-        )
-        return fn(state, ids, losses, jnp.asarray(step, jnp.int32))
+        if valid is None:
+            valid = jnp.ones(jnp.asarray(ids).shape, bool)
+
+        def local(st, i, l, v, s):
+            if self.route:
+                i, l, v, mine = self._exchange(i, l, v)
+                v = v & mine
+            return record(self.local_cfg, st, i, l, s, valid=v)
+
+        fn = self._wrap(local, 3, state_spec)
+        return fn(state, ids, losses, valid, jnp.asarray(step, I32))
 
     def lookup(self, state: LedgerState, ids):
         dp = P(tuple(self.dp_axes))
-        fn = self._wrap(lambda st, i, s: lookup(st, i), 1, (dp, dp))
-        return fn(state, ids, jnp.zeros((), jnp.int32))
+
+        def local(st, i, s):
+            if not self.route:
+                return lookup(st, i)
+            b = i.shape[0]
+            i_all, mine = self._exchange(i)
+            ema, seen = lookup(st, i_all)
+            return (
+                self._return_route(ema, mine, b),
+                self._return_route(seen.astype(I32), mine, b) > 0,
+            )
+
+        fn = self._wrap(local, 1, (dp, dp))
+        return fn(state, ids, jnp.zeros((), I32))
 
     def priority(self, state: LedgerState, ids, step):
         dp = P(tuple(self.dp_axes))
-        fn = self._wrap(
-            lambda st, i, s: priority(self.local_cfg, st, i, s), 1, dp
-        )
-        return fn(state, ids, jnp.asarray(step, jnp.int32))
+
+        def local(st, i, s):
+            if not self.route:
+                return priority(self.local_cfg, st, i, s)
+            b = i.shape[0]
+            i_all, mine = self._exchange(i)
+            pri = priority(self.local_cfg, st, i_all, s)
+            return self._return_route(pri, mine, b)
+
+        fn = self._wrap(local, 1, dp)
+        return fn(state, ids, jnp.asarray(step, I32))
 
     def record_priority(
-        self, state: LedgerState, ids, losses, step, impl: Optional[str] = None
+        self,
+        state: LedgerState,
+        ids,
+        losses,
+        step,
+        valid=None,
+        impl: Optional[str] = None,
     ):
         dp = P(tuple(self.dp_axes))
         state_spec = LedgerState(dp, dp, dp, dp)
-        fn = self._wrap(
-            lambda st, i, l, s: record_priority(
-                self.local_cfg, st, i, l, s, impl=impl
-            ),
-            2,
-            (state_spec, dp),
+        if valid is None:
+            valid = jnp.ones(jnp.asarray(ids).shape, bool)
+
+        def local(st, i, l, v, s):
+            if not self.route:
+                return record_priority(
+                    self.local_cfg, st, i, l, s, valid=v, impl=impl
+                )
+            b = i.shape[0]
+            i_all, l_all, v_all, mine = self._exchange(i, l, v)
+            st2, pri = record_priority(
+                self.local_cfg, st, i_all, l_all, s,
+                valid=v_all & mine, impl=impl,
+            )
+            return st2, self._return_route(pri, mine, b)
+
+        fn = self._wrap(local, 3, (state_spec, dp))
+        return fn(state, ids, losses, valid, jnp.asarray(step, I32))
+
+    # -- host interchange / migration ---------------------------------------
+
+    def state_dict(self, state: LedgerState) -> dict[str, np.ndarray]:
+        """Export the table as an .npz-able state_dict.
+
+        Routed tables (and 1-shard ones) ARE the global interchange
+        layout. A pinned multi-shard table holds records on *consumer*
+        shards — a placement only meaningful to this (shard count, pinned
+        feed) pair — so it is exported raw with a ``pinned_shards`` marker:
+        ``load_state_dict`` below round-trips it losslessly into the same
+        layout, and every other loader (``DeviceLedger``/``LossHistory``/
+        ``rehash_state_dict``) treats a marked dict as a bag of records and
+        re-hashes it into its own layout.
+        """
+        raw = state_dict_of(state)
+        if not self.route and self.shards > 1:
+            raw["pinned_shards"] = np.int64(self.shards)
+        return raw
+
+    def load_state_dict(self, sd: dict[str, np.ndarray]) -> LedgerState:
+        """Restore a state_dict, preserving placement when possible.
+
+        A ``pinned_shards`` export matching this ops' (pinned, same shard
+        count, same capacity) layout is placed verbatim — the lossless
+        checkpoint round-trip. Anything else is re-hashed into the global
+        layout and placed at hash-home shards: exact for routed lookups,
+        but a PINNED multi-shard target will only hit records whose
+        consumer shard coincides with the home shard, so that combination
+        gets a loud warning (use ``route=True``, or restore into the
+        layout that wrote the file)."""
+        sd = dict(sd)
+        marker = sd.pop("pinned_shards", None)
+        n = np.asarray(sd["ema"]).shape[0]
+        pinned_match = (
+            marker is not None
+            and int(marker) == self.shards
+            and not self.route
+            and n == self.cfg.capacity
         )
-        return fn(state, ids, losses, jnp.asarray(step, jnp.int32))
+        if not pinned_match and (marker is not None or n != self.cfg.capacity):
+            sd = rehash_state_dict(sd, self.cfg.capacity)
+        if not pinned_match and not self.route and self.shards > 1:
+            print(
+                "WARNING: loading a foreign-layout ledger into a pinned "
+                f"{self.shards}-shard table places records at hash-home "
+                "shards; a pinned feed will mostly miss them. Use "
+                "route=True (train --ledger-route) to look them up there."
+            )
+        sh = NamedSharding(self.mesh, P(tuple(self.dp_axes)))
+        return jax.tree.map(
+            lambda x: jax.device_put(x, sh), state_from_dict(sd)
+        )
 
 
 def sharded_ledger_ops(
     mesh: Mesh,
     cfg: HistoryConfig = HistoryConfig(),
     dp_axes: Sequence[str] = ("data",),
+    route: bool = False,
 ) -> ShardedLedgerOps:
-    """Build sharded ledger ops; global capacity must divide over the mesh."""
+    """Build sharded ledger ops; global capacity must divide over the mesh.
+
+    ``route=True`` adds the cross-shard id exchange so unpinned feeds hit
+    their records (see the module docstring for the layout consequences).
+    """
     shards = 1
     for a in dp_axes:
         shards *= mesh.shape[a]
@@ -133,5 +284,51 @@ def sharded_ledger_ops(
         raise ValueError(f"per-shard capacity {local_cap} must be 2^k")
     local_cfg = dataclasses.replace(cfg, capacity=local_cap)
     return ShardedLedgerOps(
-        mesh=mesh, dp_axes=tuple(dp_axes), cfg=cfg, local_cfg=local_cfg
+        mesh=mesh, dp_axes=tuple(dp_axes), cfg=cfg, local_cfg=local_cfg,
+        route=route,
     )
+
+
+# ---------------------------------------------------------------------------
+# host-side layout migration (checkpoint-time, numpy)
+# ---------------------------------------------------------------------------
+
+
+def split_state_dict(
+    sd: dict[str, np.ndarray], shards: int
+) -> list[dict[str, np.ndarray]]:
+    """Global layout -> per-shard local tables (hash-home placement).
+
+    Because the routed layout is the global table sliced contiguously,
+    this is a lossless reshape: the record at global slot g lands on shard
+    g // (C/S) at local slot g mod (C/S) — its local hash slot.
+    """
+    cap = np.asarray(sd["owner"]).shape[0]
+    if cap % shards:
+        raise ValueError(f"capacity {cap} not divisible by {shards} shards")
+    lc = cap // shards
+    if lc & (lc - 1):
+        raise ValueError(f"per-shard capacity {lc} must be 2^k")
+    return [
+        {k: np.asarray(v)[s * lc : (s + 1) * lc].copy() for k, v in sd.items()}
+        for s in range(shards)
+    ]
+
+
+def merge_shard_state_dicts(
+    sds: Sequence[dict[str, np.ndarray]],
+    capacity: Optional[int] = None,
+) -> dict[str, np.ndarray]:
+    """Per-shard local tables -> one global-layout table.
+
+    The inverse of ``split_state_dict`` (lossless for hash-home placement:
+    re-hashing puts every record back at its global slot). For tables
+    populated by a *pinned* feed, records from different shards can
+    collide at the same global slot — the most recent one wins, matching
+    the ledger's lossy-cache eviction semantics.
+    """
+    concat = {
+        k: np.concatenate([np.asarray(sd[k]) for sd in sds])
+        for k in ("ema", "count", "last_seen", "owner")
+    }
+    return rehash_state_dict(concat, capacity or concat["owner"].shape[0])

@@ -43,6 +43,7 @@ def _ledger_kernel(
     step_ref,  # [1, 1] i32
     ids_ref,  # [Bp, 1] i32
     loss_ref,  # [Bp, 1] f32
+    valid_ref,  # [Bp, 1] i32 (0 = skip the write, still score)
     ema_in,  # [R, 128] f32   (pre-batch snapshot)
     cnt_in,  # [R, 128] i32
     ls_in,  # [R, 128] i32
@@ -56,6 +57,7 @@ def _ledger_kernel(
     batch: int,
     decay: float,
     unseen_priority: float,
+    staleness_half_life: float,
 ):
     rows = ema_in.shape[0]
     cap = rows * LANES
@@ -75,10 +77,13 @@ def _ledger_kernel(
 
     # pass 1: scatter updates. Values come from the *input* snapshot, the
     # running table only receives writes — sequential last-write-wins then
-    # matches the host ledger's vectorized numpy semantics exactly.
+    # matches the host ledger's vectorized numpy semantics exactly. Items
+    # with valid == 0 contribute no write at all (their mask is zeroed), so
+    # a masked item never shadows a valid one.
     def write(i, carry):
         ema, cnt, ls, own = carry
         idv, mask = slot_mask(i)
+        mask = mask & (valid_ref[i, 0] != 0)
         loss = loss_ref[i, 0]
         fresh = probe(mask, own_in[...]) != idv
         prev = jnp.where(fresh, loss, probe(mask, ema_in[...]))
@@ -99,15 +104,18 @@ def _ledger_kernel(
     ls_out[...] = ls
     own_out[...] = own
 
-    # pass 2: post-update priority per item. last_seen == step for every
-    # recorded slot, so the staleness boost is exp2(0) = 1 and the score is
-    # the fresh EMA; items evicted within the batch read back as unseen.
+    # pass 2: post-update priority per item, against the updated table.
+    # Recorded slots have last_seen == step (boost exp2(0) = 1: the fresh
+    # EMA); write-masked items hit whatever record their slot holds, with
+    # the staleness boost applied; within-batch evictions read as unseen.
     pri_iota = jax.lax.broadcasted_iota(I32, pri_ref.shape, 0)
 
     def score(i, pri):
         idv, mask = slot_mask(i)
         seen = probe(mask, own) == idv
-        val = jnp.where(seen, probe(mask, ema), unseen_priority)
+        age = jnp.maximum(step - probe(mask, ls), 0).astype(F32)
+        boost = jnp.exp2(age / staleness_half_life)  # 1.0 when hl is inf
+        val = jnp.where(seen, probe(mask, ema) * boost, unseen_priority)
         return jnp.where(pri_iota == i, val, pri)
 
     pri_ref[...] = jax.lax.fori_loop(
@@ -123,7 +131,10 @@ def _pad_rows(x, mult):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("decay", "unseen_priority", "interpret")
+    jax.jit,
+    static_argnames=(
+        "decay", "unseen_priority", "staleness_half_life", "interpret"
+    ),
 )
 def ledger_record_priority(
     ema: jax.Array,  # [capacity] f32
@@ -133,9 +144,11 @@ def ledger_record_priority(
     ids: jax.Array,  # [B] i32
     losses: jax.Array,  # [B] f32
     step: jax.Array,  # scalar i32
+    valid: jax.Array | None = None,  # [B] bool, None = all writes land
     *,
     decay: float,
     unseen_priority: float,
+    staleness_half_life: float = float("inf"),
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """-> (ema', count', last_seen', owner', priority [B] f32)."""
@@ -146,6 +159,9 @@ def ledger_record_priority(
     shape2d = (rows, LANES)
     ids2 = _pad_rows(ids.astype(I32)[:, None], 8)
     loss2 = _pad_rows(losses.astype(F32)[:, None], 8)
+    if valid is None:
+        valid = jnp.ones((b,), I32)
+    valid2 = _pad_rows(jnp.asarray(valid).astype(I32)[:, None], 8)
     bp = ids2.shape[0]
     step2 = jnp.asarray(step, I32).reshape(1, 1)
     kernel = functools.partial(
@@ -153,6 +169,7 @@ def ledger_record_priority(
         batch=b,
         decay=float(decay),
         unseen_priority=float(unseen_priority),
+        staleness_half_life=float(staleness_half_life),
     )
     ema2, cnt2, ls2, own2, pri = pl.pallas_call(
         kernel,
@@ -168,6 +185,7 @@ def ledger_record_priority(
         step2,
         ids2,
         loss2,
+        valid2,
         ema.reshape(shape2d),
         count.reshape(shape2d),
         last_seen.reshape(shape2d),

@@ -118,19 +118,29 @@ def ledger_record_priority(
     *,
     decay: float,
     unseen_priority: float,
+    staleness_half_life: float = float("inf"),
+    valid: Optional[jax.Array] = None,
     impl: Optional[str] = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
-    """One-pass ledger transaction -> (ema', count', last_seen', owner', pri)."""
+    """One-pass ledger transaction -> (ema', count', last_seen', owner', pri).
+
+    ``valid`` ([B] bool) masks the write (dropped items are still scored);
+    ``staleness_half_life`` feeds the priority's exp2(age/half_life) boost
+    (inf = no boost, the pre-mask behavior where every scored id was just
+    recorded at age 0).
+    """
     impl = _resolve(impl)
     if impl == "ref":
         return _ref.ledger_record_priority_ref(
             ema, count, last_seen, owner, ids, losses, step,
-            decay, unseen_priority,
+            decay, unseen_priority, staleness_half_life, valid,
         )
     return _ledger.ledger_record_priority(
         ema, count, last_seen, owner, ids, losses, step,
+        valid=valid,
         decay=decay,
         unseen_priority=unseen_priority,
+        staleness_half_life=staleness_half_life,
         interpret=(impl == "interpret"),
     )
 

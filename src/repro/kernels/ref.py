@@ -54,13 +54,18 @@ def ledger_record_priority_ref(
     step: Array,  # scalar i32
     decay: float,
     unseen_priority: float,
+    staleness_half_life: float = float("inf"),
+    valid: Optional[Array] = None,  # [B] bool, None = all valid
 ) -> tuple[Array, Array, Array, Array, Array]:
     """Fused ledger record+priority (repro.core.device_ledger semantics).
 
     Scatter-EMA write with deterministic numpy last-write-wins on intra-batch
-    slot collisions, then the post-update priority of each recorded id
-    (staleness age 0 -> score = fresh EMA; within-batch evictions read back
-    as unseen). Hash must match repro.core.history.slot_for.
+    slot collisions, then the post-update priority of EVERY queried id
+    against the updated table. Just-recorded ids have age 0 (score = fresh
+    EMA); ``valid``-masked items skip the write but are still scored, with
+    the staleness boost applied to whatever record they hit. Within-batch
+    evictions read back as unseen. Hash must match
+    repro.core.history.slot_for.
     """
     from repro.core.device_ledger import slot_for_jnp
 
@@ -76,8 +81,10 @@ def ledger_record_priority_ref(
     new_ema = decay * prev + (1.0 - decay) * losses
     new_count = jnp.where(fresh, 1, count[slots] + 1)
     order = jnp.arange(ids.shape[0], dtype=i32)
-    last = jnp.full((cap,), -1, i32).at[slots].max(order)
-    tgt = jnp.where(last[slots] == order, slots, cap)  # OOB -> dropped
+    wslots = slots if valid is None else jnp.where(valid, slots, cap)
+    last = jnp.full((cap,), -1, i32).at[wslots].max(order, mode="drop")
+    winner = (wslots < cap) & (last[slots] == order)
+    tgt = jnp.where(winner, slots, cap)  # OOB -> dropped
     ema2 = ema.at[tgt].set(new_ema, mode="drop")
     count2 = count.at[tgt].set(new_count, mode="drop")
     last_seen2 = last_seen.at[tgt].set(
@@ -85,7 +92,9 @@ def ledger_record_priority_ref(
     )
     owner2 = owner.at[tgt].set(ids, mode="drop")
     seen = owner2[slots] == ids
-    pri = jnp.where(seen, ema2[slots], unseen_priority).astype(F32)
+    age = jnp.maximum(step - last_seen2[slots], 0).astype(F32)
+    boost = jnp.exp2(age / staleness_half_life)
+    pri = jnp.where(seen, ema2[slots] * boost, unseen_priority).astype(F32)
     return ema2, count2, last_seen2, owner2, pri
 
 

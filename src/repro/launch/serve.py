@@ -47,8 +47,13 @@ def main(argv=None) -> int:
                          "device-resident one (no host transfer per record)")
     ap.add_argument("--ledger-out", default="",
                     help="save the ledger state_dict as .npz (interchange "
-                         "format shared by host and device ledgers; feed to "
+                         "format shared by host and device ledgers and by "
+                         "train-checkpoint ledger.npz files; feed to "
                          "launch.train --ledger-in for recycle training)")
+    ap.add_argument("--ledger-in", default="",
+                    help="warm-start from an .npz state_dict (e.g. a train "
+                         "checkpoint's ledger.npz), so serving-time records "
+                         "accumulate on top of the trainer's signal")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -64,6 +69,10 @@ def main(argv=None) -> int:
     )
 
     history = DeviceLedger() if args.ledger == "device" else LossHistory()
+    if args.ledger_in:
+        history.load_state_dict(dict(np.load(args.ledger_in)))
+        live = int((np.asarray(history.state_dict()["owner"]) >= 0).sum())
+        print(f"ledger warm-start from {args.ledger_in} ({live} live slots)")
     toks, ids = sample_batch(rng, cfg, args.batch, args.prompt_len)
 
     t0 = time.time()

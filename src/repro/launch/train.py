@@ -12,8 +12,13 @@ Features exercised end-to-end (and how they map to a 1000+-node job):
   * step-time straggler watchdog (EMA + outlier threshold; in a multi-host
     job this signal feeds the controller that evicts the slow host);
   * deterministic data (restart replays the exact stream);
-  * per-instance loss history recorded from the selection forward — the
-    paper's "record information from inference" ledger.
+  * TRUE per-instance losses recorded from the step's forwards (selection
+    forward for the whole batch, backward forward for the kept subset) —
+    the paper's "record a constant amount of information per instance"
+    ledger, never a batch-mean broadcast;
+  * ledger state checkpointed with the params (``ledger.npz`` in the step
+    dir, same .npz interchange as serve's ``--ledger-out``), so --resume
+    restores the recycle signal warm instead of cold.
 """
 
 from __future__ import annotations
@@ -87,7 +92,17 @@ def main(argv=None) -> int:
                          "record fused into the jitted step, no host hop)")
     ap.add_argument("--ledger-in", default="",
                     help="warm-start the ledger from an .npz state_dict "
-                         "(e.g. written by launch.serve --ledger-out)")
+                         "(e.g. written by launch.serve --ledger-out or a "
+                         "checkpoint's ledger.npz); re-hashed on a layout "
+                         "change")
+    ap.add_argument("--ledger-out", default="",
+                    help="save the final ledger state_dict as .npz (global "
+                         "slot layout, the shared interchange format)")
+    ap.add_argument("--ledger-route", action="store_true",
+                    help="cross-shard id routing for the sharded device "
+                         "ledger: exchange each id to the shard owning its "
+                         "global slot before record/lookup, for feeds that "
+                         "do not pin instances to a data shard")
     ap.add_argument("--json-out", default="",
                     help="write a run summary (losses, step cost) as JSON")
     ap.add_argument("--instance-pool", type=int, default=0,
@@ -137,13 +152,16 @@ def main(argv=None) -> int:
 
     ckpt = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
     start_step = 0
+    resume_ledger = None  # applied below, once the ledger exists
     if ckpt and args.resume:
         s = ckpt.latest() if args.resume == "auto" else int(args.resume)
         if s is not None:
             state = ckpt.restore(s, state)
             state = jax.tree.map(jnp.asarray, state)
             start_step = int(state["step"])
-            print(f"resumed from step {start_step}")
+            resume_ledger = ckpt.restore_ledger(s)
+            print(f"resumed from step {start_step}"
+                  + (" (with ledger)" if resume_ledger is not None else ""))
 
     dcfg = DataConfig(args.global_batch, args.seq_len, cfg.vocab_size,
                       seed=args.seed)
@@ -163,23 +181,27 @@ def main(argv=None) -> int:
     led_ops = led_state = None
     history = None
     feed = stream
+
+    def load_device_sd(sd):
+        """State_dict -> placed LedgerState (each loader re-hashes foreign
+        layouts into its own; sharded placement goes through the ops)."""
+        if led_ops is not None:
+            return led_ops.load_state_dict(sd)
+        led = dledger.DeviceLedger(lcfg)
+        led.load_state_dict(sd)
+        return led.state
+
     if use_device_ledger:
         # device-resident ledger: lookup + record fuse into the jitted step
         # below; the recycle signal never touches the host.
         if single_device:
             led_state = dledger.init_state(lcfg)
         else:
-            led_ops = sharded_ledger_ops(mesh, lcfg, rules.batch_axes)
+            led_ops = sharded_ledger_ops(mesh, lcfg, rules.batch_axes,
+                                         route=args.ledger_route)
             led_state = led_ops.init()
         if args.ledger_in:
-            if led_ops is not None and led_ops.shards > 1:
-                raise SystemExit(
-                    "--ledger-in uses the global slot layout; a "
-                    f"{led_ops.shards}-shard ledger has its own addressing"
-                )
-            led = dledger.DeviceLedger(lcfg)
-            led.load_state_dict(dict(np.load(args.ledger_in)))
-            led_state = led.state
+            led_state = load_device_sd(dict(np.load(args.ledger_in)))
             print(f"ledger warm-start from {args.ledger_in} "
                   f"({int(np.sum(np.asarray(led_state.owner) >= 0))} live slots)")
     else:
@@ -191,6 +213,27 @@ def main(argv=None) -> int:
         if args.recycle:
             feed = RecycleFeed(stream, history, ledger="host",
                                cold_loss=COLD_LOSS)
+    if resume_ledger is not None:
+        # the checkpoint's ledger wins over --ledger-in: it is the recycle
+        # signal as of the resumed step, not the (older) serve-time export
+        if use_device_ledger:
+            led_state = load_device_sd(resume_ledger)
+        else:
+            history.load_state_dict(resume_ledger)
+        live = int((np.asarray(resume_ledger["owner"]) >= 0).sum())
+        print(f"ledger restored from checkpoint ({live} live slots)")
+
+    def ledger_state_dict():
+        """Current ledger as an .npz-able state_dict: the global
+        interchange layout, except a pinned multi-shard table which
+        exports raw with a ``pinned_shards`` marker (lossless same-layout
+        resume; other loaders re-hash it)."""
+        if use_device_ledger:
+            if led_ops is not None:
+                return led_ops.state_dict(led_state)
+            return dledger.state_dict_of(led_state)
+        return history.state_dict()
+
     watchdog = Watchdog()
 
     stop = {"now": False}
@@ -207,8 +250,9 @@ def main(argv=None) -> int:
         if led_ops:
             led_record = led_ops.record
         else:
-            def led_record(lstate, ids, losses, step):
-                return dledger.record(lcfg, lstate, ids, losses, step)
+            def led_record(lstate, ids, losses, step, valid):
+                return dledger.record(lcfg, lstate, ids, losses, step,
+                                      valid=valid)
 
         def step_with_ledger(state, lstate, batch, rng):
             """Ledger probe -> OBFTF step -> ledger write, one jit, zero
@@ -218,10 +262,24 @@ def main(argv=None) -> int:
             rec = jnp.where(seen, ema, COLD_LOSS).astype(jnp.float32)
             state, metrics = step_fn(state, dict(batch, recorded_loss=rec),
                                      rng)
-            per_inst = jnp.broadcast_to(metrics["loss"], ids.shape)
-            lstate = led_record(lstate, ids, per_inst, state["step"])
+            # TRUE per-example losses from the step's forwards, written
+            # only where a loss was computed this step (`fresh`): under
+            # --recycle that is the backward subset — replayed records are
+            # never re-recorded as observations (which would fake
+            # last_seen and collapse the signal toward its own echo).
+            lstate = led_record(
+                lstate,
+                ids,
+                metrics["per_example_loss"],
+                state["step"],
+                metrics["per_example_fresh"],
+            )
             metrics = dict(metrics, ledger_hits=jnp.mean(
                 seen.astype(jnp.float32)))
+            # the per-example arrays exist for the ledger write above;
+            # don't ship [batch] arrays to the host with the scalars.
+            for k in ("per_example_loss", "per_example_fresh"):
+                del metrics[k]
             return state, lstate, metrics
 
         jit_step = jax.jit(
@@ -235,6 +293,7 @@ def main(argv=None) -> int:
                            if not single_device else None)
     losses_log = []
     cost_log = []
+    hits_log = []
     with use_rules(mesh, rules):
         for step in range(start_step, args.steps):
             t0 = time.time()
@@ -258,11 +317,20 @@ def main(argv=None) -> int:
             dt = time.time() - t0
             slow = watchdog.observe(dt)
             if history is not None:
-                history.record(
-                    raw["instance_id"],
-                    np.full(raw["instance_id"].shape, float(metrics["loss"])),
-                    step,
-                )
+                # true per-example losses from the step's forwards — only
+                # entries computed THIS step (fresh), never the replayed
+                # record and never a batch-mean broadcast
+                fresh = np.asarray(metrics["per_example_fresh"], bool)
+                if fresh.any():
+                    history.record(
+                        raw["instance_id"][fresh],
+                        np.asarray(metrics["per_example_loss"])[fresh],
+                        step,
+                    )
+            if use_device_ledger:
+                hits_log.append(float(metrics["ledger_hits"]))
+            elif args.recycle:
+                hits_log.append(float(raw.get("ledger_hit_rate", 0.0)))
             losses_log.append(float(metrics["loss"]))
             cost_log.append(float(metrics["step_cost"]))
             if step % args.log_every == 0 or slow:
@@ -274,13 +342,21 @@ def main(argv=None) -> int:
                     + ("  [STRAGGLER]" if slow else "")
                 )
             if ckpt and (step + 1) % args.ckpt_every == 0:
-                ckpt.save(step + 1, state)
+                ckpt.save(step + 1, state, ledger=ledger_state_dict())
             if stop["now"]:
                 break
 
     if ckpt:
-        ckpt.save(int(state["step"]), state, block=True)
+        # the SIGTERM/final save carries the ledger too: a preempted job
+        # resumes with its recycle signal warm, not cold
+        ckpt.save(int(state["step"]), state, block=True,
+                  ledger=ledger_state_dict())
         print(f"final checkpoint at step {int(state['step'])}")
+    if args.ledger_out:
+        sd = ledger_state_dict()
+        layout = ("pinned-sharded" if "pinned_shards" in sd else "global")
+        np.savez(args.ledger_out, **sd)
+        print(f"ledger saved to {args.ledger_out} ({layout} layout)")
     mean_cost = float(np.mean(cost_log)) if cost_log else 0.0
     print(f"done: {len(losses_log)} steps, "
           f"loss {losses_log[0]:.4f} -> {losses_log[-1]:.4f}, "
@@ -297,6 +373,8 @@ def main(argv=None) -> int:
             "recycle": bool(args.recycle),
             "ledger": args.ledger,
             "stragglers": watchdog.flagged,
+            "ledger_hits_first": hits_log[0] if hits_log else None,
+            "ledger_hits_mean": float(np.mean(hits_log)) if hits_log else None,
         }
         with open(args.json_out, "w") as f:
             json.dump(summary, f)

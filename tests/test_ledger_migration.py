@@ -1,0 +1,155 @@
+"""Sharded <-> global ledger state_dict migration: re-hash on layout change.
+
+The global interchange layout (one [C] table, ``history.slot_for``
+addressing) and the sharded layout (S local tables of C/S slots, hash-home
+placement) must carry the same records: ``split_state_dict`` /
+``merge_shard_state_dicts`` move between them, and
+``rehash_state_dict`` re-homes records on any capacity change. Property
+tests drive these with arbitrary id sets and shard counts (1 <-> 2 <-> 4)
+and require lookups to be indistinguishable before and after migration.
+"""
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.core import device_ledger as dl
+from repro.core.history import HistoryConfig, LossHistory, slot_for
+from repro.distributed.ledger import (
+    merge_shard_state_dicts,
+    split_state_dict,
+)
+
+CAP = 256
+
+
+def _global_ledger(seed, n_ids, steps=4):
+    """A LossHistory driven with an arbitrary record sequence."""
+    h = LossHistory(HistoryConfig(capacity=CAP, decay=0.8))
+    rng = np.random.default_rng(seed)
+    for step in range(steps):
+        ids = rng.integers(0, 4 * CAP, size=n_ids).astype(np.int64)
+        losses = rng.normal(0, 3, size=n_ids).astype(np.float32)
+        h.record(ids, losses, step)
+    return h, rng
+
+
+def _routed_lookup(shard_sds, ids):
+    """Host model of the routed sharded lookup: probe the local table of
+    each id's home shard (slot_for(id, C) // (C/S))."""
+    shards = len(shard_sds)
+    lc = CAP // shards
+    tables = []
+    for sd in shard_sds:
+        t = LossHistory(HistoryConfig(capacity=lc))
+        t.load_state_dict(sd)
+        tables.append(t)
+    ema = np.zeros(len(ids), np.float32)
+    seen = np.zeros(len(ids), bool)
+    home = slot_for(ids, CAP) // lc
+    for s in range(shards):
+        m = home == s
+        if m.any():
+            e, sn = tables[s].lookup(np.asarray(ids)[m])
+            ema[m], seen[m] = e, sn
+    return ema, seen
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_ids=st.integers(1, 64),
+    shards=st.sampled_from([1, 2, 4]),
+)
+def test_property_split_preserves_every_lookup(seed, n_ids, shards):
+    """global -> S shards: every probe answers identically (the split is a
+    lossless reshape of the routed layout)."""
+    h, rng = _global_ledger(seed, n_ids)
+    probe = rng.integers(0, 4 * CAP, size=128).astype(np.int64)
+    want_e, want_s = h.lookup(probe)
+    parts = split_state_dict(h.state_dict(), shards)
+    got_e, got_s = _routed_lookup(parts, probe)
+    np.testing.assert_array_equal(got_s, want_s)
+    np.testing.assert_allclose(got_e, want_e, rtol=1e-6)
+    # count survives too (the "constant information per instance" record)
+    merged = merge_shard_state_dicts(parts)
+    for k in ("ema", "count", "last_seen", "owner"):
+        np.testing.assert_array_equal(merged[k], h.state_dict()[k])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_ids=st.integers(1, 64),
+    s1=st.sampled_from([1, 2, 4]),
+    s2=st.sampled_from([1, 2, 4]),
+)
+def test_property_shard_count_migration_roundtrip(seed, n_ids, s1, s2):
+    """S1 -> global -> S2 -> global: (ema, seen, count) lookups identical
+    across arbitrary shard-count migrations."""
+    h, rng = _global_ledger(seed, n_ids)
+    probe = rng.integers(0, 4 * CAP, size=128).astype(np.int64)
+    want_e, want_s = h.lookup(probe)
+    sd = merge_shard_state_dicts(split_state_dict(h.state_dict(), s1))
+    sd = merge_shard_state_dicts(split_state_dict(sd, s2))
+    got_e, got_s = _routed_lookup(split_state_dict(sd, s2), probe)
+    np.testing.assert_array_equal(got_s, want_s)
+    np.testing.assert_allclose(got_e, want_e, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_ids=st.integers(1, 48))
+def test_property_rehash_capacity_change_recency_wins(seed, n_ids):
+    """Re-hash into a smaller table: every surviving record is unchanged,
+    every probed id either finds its exact record or was evicted by a
+    MORE RECENT record colliding at its new slot."""
+    h, rng = _global_ledger(seed, n_ids)
+    small = CAP // 4
+    sd = h.state_dict()
+    out = dl.rehash_state_dict(sd, small)
+    live = sd["owner"] >= 0
+    for iid, ema, cnt, ls in zip(
+        sd["owner"][live], sd["ema"][live], sd["count"][live],
+        sd["last_seen"][live],
+    ):
+        slot = int(slot_for(np.asarray([iid]), small)[0])
+        if out["owner"][slot] == iid:  # survived: the full record moved
+            np.testing.assert_allclose(out["ema"][slot], ema, rtol=1e-6)
+            assert out["count"][slot] == cnt
+            assert out["last_seen"][slot] == ls
+        else:  # evicted: only by a collider at least as recent
+            assert out["last_seen"][slot] >= ls
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), shards=st.sampled_from([2, 4]))
+def test_property_pinned_merge_keeps_most_recent(seed, shards):
+    """Merging PINNED per-shard tables (records on consumer shards, not
+    hash-home): every merged slot holds the most recent record among the
+    shards' candidates for it, and nothing else appears."""
+    lc = CAP // shards
+    rng = np.random.default_rng(seed)
+    locals_ = []
+    candidates = {}  # global slot -> list of (last_seen, id, ema)
+    for s in range(shards):
+        t = LossHistory(HistoryConfig(capacity=lc, decay=0.8))
+        for step in range(3):
+            ids = rng.integers(0, 4 * CAP, size=16).astype(np.int64)
+            losses = rng.normal(0, 1, size=16).astype(np.float32)
+            # distinct steps per shard => strict recency order, so the
+            # winner under collisions is unique and checkable
+            t.record(ids, losses, step * shards + s)
+        sd = t.state_dict()
+        locals_.append(sd)
+        live = sd["owner"] >= 0
+        for iid, ema, ls in zip(
+            sd["owner"][live], sd["ema"][live], sd["last_seen"][live]
+        ):
+            g = int(slot_for(np.asarray([iid]), CAP)[0])
+            candidates.setdefault(g, []).append((int(ls), int(iid), float(ema)))
+    merged = merge_shard_state_dicts(locals_, CAP)
+    for g, cands in candidates.items():
+        ls, iid, ema = max(cands)
+        assert merged["owner"][g] == iid
+        np.testing.assert_allclose(merged["ema"][g], ema, rtol=1e-6)
+    live_slots = np.flatnonzero(merged["owner"] >= 0)
+    assert set(live_slots.tolist()) == set(candidates.keys())

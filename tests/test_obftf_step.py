@@ -10,6 +10,7 @@ from jax.sharding import Mesh
 
 from repro.core.obftf import (
     OBFTFConfig,
+    make_eval_step,
     make_train_step,
     model_inputs,
     select_and_gather,
@@ -97,6 +98,103 @@ def test_recycled_forward_skips_selection_forward():
     _, m = jax.jit(step)(state, batch, RNG)
     # selected losses are the recorded ones (mean == 100)
     np.testing.assert_allclose(float(m["selected_mean_loss"]), 100.0)
+
+
+# ---------------------------------------------------------------------------
+# per-example losses out of the step (the recycle ledger's write signal)
+# ---------------------------------------------------------------------------
+
+
+def _per_example_setup(n=16, recycled=False, mesh=None):
+    params = _toy_params()
+    batch = _toy_batch(n=n)
+    batch["instance_id"] = jnp.arange(100, 100 + n, dtype=jnp.int32)
+    cfg = OBFTFConfig(
+        selection=SelectionConfig(method="obftf", ratio=0.25),
+        recycle_forward=recycled,
+    )
+    if recycled:
+        batch["recorded_loss"] = jnp.linspace(1.0, 9.0, n)
+    opt = adamw(constant(1e-2))
+    step = make_train_step(_toy_loss_fn, opt, cfg, mesh=mesh)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    return params, batch, step, state
+
+
+@pytest.mark.parametrize("use_mesh", [False, True])
+def test_per_example_losses_match_eval_oracle(use_mesh):
+    """The step's per_example_loss metric is the TRUE per-instance loss
+    (what make_eval_step computes with the pre-update params), aligned to
+    the in-batch index — not the batch mean — on the plain path and under
+    shard_map."""
+    mesh = (
+        Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+        if use_mesh else None
+    )
+    params, batch, step, state = _per_example_setup(mesh=mesh)
+    _, m = jax.jit(step)(state, batch, RNG)
+    oracle = make_eval_step(_toy_loss_fn)(params, batch, RNG)
+    got = np.asarray(m["per_example_loss"])
+    assert bool(np.all(np.asarray(m["per_example_fresh"])))
+    # per instance id: every id's recorded signal equals its own loss
+    by_id = dict(zip(np.asarray(batch["instance_id"]).tolist(), got))
+    for iid, want in zip(
+        np.asarray(batch["instance_id"]).tolist(), np.asarray(oracle)
+    ):
+        np.testing.assert_allclose(by_id[iid], want, rtol=1e-5)
+    # and it is NOT the batch-mean broadcast the trainer used to write
+    assert float(np.std(got)) > 1e-3
+
+
+def test_per_example_losses_recycled_marks_fresh_subset():
+    """Under forward recycling only the backward subset carries a loss
+    computed this step; the rest replays the record and is fresh=False."""
+    params, batch, step, state = _per_example_setup(recycled=True)
+    _, m = jax.jit(step)(state, batch, RNG)
+    fresh = np.asarray(m["per_example_fresh"])
+    got = np.asarray(m["per_example_loss"])
+    rec = np.asarray(batch["recorded_loss"])
+    assert fresh.sum() == 4  # the kept subset (ratio 0.25 of 16)
+    # non-fresh positions replay the recorded signal verbatim
+    np.testing.assert_allclose(got[~fresh], rec[~fresh], rtol=1e-6)
+    # fresh positions are the oracle's true losses for those instances
+    oracle = np.asarray(make_eval_step(_toy_loss_fn)(params, batch, RNG))
+    np.testing.assert_allclose(got[fresh], oracle[fresh], rtol=1e-5)
+
+
+def test_fused_ledger_train_step_is_transfer_free():
+    """The whole recycle transaction — ledger probe, OBFTF step, masked
+    per-example write — in one jit, under transfer_guard('disallow'): any
+    device->host or host->device hop would raise."""
+    from repro.core import device_ledger as dl
+    from repro.core.history import HistoryConfig
+
+    lcfg = HistoryConfig(capacity=256)
+    params, batch, step, state = _per_example_setup(recycled=True)
+    del batch["recorded_loss"]  # joined on-device from the ledger below
+
+    def fused(state, lstate, batch, rng):
+        ids = batch["instance_id"]
+        ema, seen = dl.lookup(lstate, ids)
+        rec = jnp.where(seen, ema, 1e3).astype(jnp.float32)
+        state, m = step(state, dict(batch, recorded_loss=rec), rng)
+        lstate = dl.record(
+            lcfg, lstate, ids, m["per_example_loss"], state["step"],
+            valid=m["per_example_fresh"],
+        )
+        return state, lstate, m["loss"]
+
+    jit_fused = jax.jit(fused, donate_argnums=(1,))
+    lstate = dl.init_state(lcfg)
+    keys = [jax.random.key(i) for i in range(3)]  # staged outside the guard
+    state, lstate, _ = jit_fused(state, lstate, batch, RNG)  # compile
+    with jax.transfer_guard("disallow"):
+        for k in keys:
+            state, lstate, loss = jit_fused(state, lstate, batch, k)
+    assert np.isfinite(float(loss))
+    # the ledger accumulated only the fresh (backward-subset) records
+    assert 0 < int(np.sum(np.asarray(lstate.owner) >= 0)) <= 16
 
 
 def test_meta_keys_not_fed_to_model():

@@ -15,8 +15,10 @@ a selection forward. Assertions:
 
 import json
 import os
+import signal
 import subprocess
 import sys
+import time
 
 import numpy as np
 import pytest
@@ -76,6 +78,67 @@ def test_serve_then_recycle_train(tmp_path, ledger):
     assert abs(summary["mean_step_cost"] - 0.75) < 1e-6, summary
     # and the model still learns off the recycled signal
     assert summary["loss_last"] < summary["loss_first"], summary
+
+
+def test_sigterm_resume_restores_ledger(tmp_path):
+    """Preemption drill: SIGTERM a recycle run mid-flight, `--resume auto`,
+    and the restored run must see a WARM ledger — its hit rate from the
+    first resumed step is at least the pre-kill run's rate (a cold ledger
+    would restart at 0.0 and re-pay the whole warmup)."""
+    ckpt_dir = str(tmp_path / "ckpt")
+    json_kill = str(tmp_path / "killed.json")
+    json_resume = str(tmp_path / "resumed.json")
+    base = [
+        "repro.launch.train", "--arch", "llama3-8b", "--smoke",
+        "--global-batch", "8", "--seq-len", "32", "--ratio", "0.25",
+        "--recycle", "--ledger", "device", "--instance-pool", "32",
+        "--ckpt-dir", ckpt_dir, "--ckpt-every", "5", "--log-every", "1",
+    ]
+
+    # -u so step lines arrive unbuffered; kill once training is mid-run
+    proc = subprocess.Popen(
+        [sys.executable, "-u", "-m", *base, "--steps", "500",
+         "--json-out", json_kill],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=ENV, cwd=CWD,
+    )
+    try:
+        deadline = time.time() + 560
+        for line in proc.stdout:
+            if line.startswith("step    12") or time.time() > deadline:
+                break
+        proc.send_signal(signal.SIGTERM)
+        out = proc.stdout.read()
+        rc = proc.wait(timeout=120)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    assert rc == 0, out
+    assert "checkpoint + exit after this step" in out
+    assert "final checkpoint" in out
+    with open(json_kill) as f:
+        killed = json.load(f)
+    assert 0 < killed["steps"] < 500  # genuinely interrupted mid-run
+    assert killed["ledger_hits_mean"] > 0  # the ledger had warmed up
+
+    # the SIGTERM-path checkpoint carries the ledger state
+    steps = sorted(os.listdir(ckpt_dir))
+    assert steps and os.path.exists(
+        os.path.join(ckpt_dir, steps[-1], "ledger.npz")
+    )
+
+    r = _run([*base, "--resume", "auto", "--json-out", json_resume,
+              "--steps", str(killed["steps"] + 10)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "resumed from step" in r.stdout
+    assert "ledger restored from checkpoint" in r.stdout
+    with open(json_resume) as f:
+        resumed = json.load(f)
+    # warm from the very first resumed step: >= the whole pre-kill rate
+    assert resumed["ledger_hits_first"] >= killed["ledger_hits_mean"], (
+        resumed, killed,
+    )
+    assert resumed["ledger_hits_first"] > 0
 
 
 def test_recycle_step_cost_beats_plain_obftf(tmp_path):
