@@ -1,0 +1,134 @@
+"""Diff two nightly benchmark result files and flag regressions (fail-soft).
+
+    python -m benchmarks.diff_tables prev.txt curr.txt [--threshold 0.25] \
+        [--summary-out summary.md]
+
+The nightly job feeds this the previous run's artifact and today's output.
+Rows are the CSV lines the benchmark sections emit
+(``table,key...,metric[,extra]``); a row is keyed by its non-numeric
+cells PLUS any numeric cell whose column names a configuration axis
+(``n``, ``capacity``, ``batch``, ...) — otherwise two sizes of the same
+benchmark would collapse into one key and all but the last would silently
+escape regression detection — and compared on the remaining numeric
+(metric) columns. Rows that still share a key are disambiguated by
+occurrence order. Time-like metrics (``us``/``ms`` per call/step, wall
+seconds) regress UP; throughput-like ones (``tok_per_s``, ratios)
+regress DOWN. Exit code is always 0 — CI must not go red because a
+shared runner was slow; the job summary carries the warnings instead.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+# metric-column name fragments that mean "bigger is better"
+_UP_GOOD = ("tok_per_s", "ratio", "hit", "accuracy")
+# numeric columns that identify WHICH benchmark a row is (part of the row
+# key, matched by exact column name), as opposed to a measured quantity —
+# "ratio" is fig1/fig2/table3's selection-ratio config axis (the metric
+# named traffic_ratio_vs_naive is NOT an exact match and stays a metric)
+_KEY_COLS = ("n", "capacity", "batch", "slots", "gen", "size", "steps",
+             "seq", "shape", "ratio")
+
+
+def parse_tables(text: str) -> dict[tuple, dict[str, float]]:
+    """CSV rows -> {(table, key..., occurrence?): {column: value}}."""
+    rows: dict[tuple, dict[str, float]] = {}
+    header: list[str] = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or "," not in line:
+            continue
+        cells = line.split(",")
+        if cells[0] == "table":
+            header = cells
+            continue
+        if not header or len(cells) != len(header):
+            continue
+        key, vals = [], {}
+        for name, cell in zip(header, cells):
+            if name in _KEY_COLS:
+                key.append(f"{name}={cell}")
+                continue
+            try:
+                vals[name] = float(cell)
+            except ValueError:
+                key.append(cell)
+        if not vals:
+            continue
+        k = tuple(key)
+        if k in rows:  # same key again: disambiguate by occurrence
+            n = 2
+            while (*k, f"#{n}") in rows:
+                n += 1
+            k = (*k, f"#{n}")
+        rows[k] = vals
+    return rows
+
+
+def diff(prev: str, curr: str, threshold: float) -> tuple[list[str], list[str]]:
+    """-> (regression warnings, info lines)."""
+    p, c = parse_tables(prev), parse_tables(curr)
+    warns, infos = [], []
+    for key, cvals in sorted(c.items()):
+        pvals = p.get(key)
+        if pvals is None:
+            infos.append(f"new row: {','.join(key)}")
+            continue
+        for col, cv in cvals.items():
+            pv = pvals.get(col)
+            if pv is None or pv == 0:
+                continue
+            rel = (cv - pv) / abs(pv)
+            up_good = any(frag in col for frag in _UP_GOOD)
+            regressed = (-rel if up_good else rel) > threshold
+            if regressed:
+                warns.append(
+                    f"REGRESSION {','.join(key)} {col}: "
+                    f"{pv:.3g} -> {cv:.3g} ({rel:+.0%})"
+                )
+    gone = sorted(set(p) - set(c))
+    for key in gone:
+        warns.append(f"MISSING row (present last run): {','.join(key)}")
+    return warns, infos
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev")
+    ap.add_argument("curr")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative change that counts as a regression "
+                         "(generous: shared CI runners are noisy)")
+    ap.add_argument("--summary-out", default="",
+                    help="append a markdown summary (GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+    try:
+        prev = open(args.prev).read()
+    except OSError as e:
+        print(f"no previous results ({e}); nothing to diff")
+        return 0
+    curr = open(args.curr).read()
+    warns, infos = diff(prev, curr, args.threshold)
+    lines = ["## Nightly benchmark trend", ""]
+    if warns:
+        lines.append(f"⚠️ {len(warns)} possible regression(s) vs previous "
+                     f"run (threshold {args.threshold:.0%}, fail-soft):")
+        lines += [f"- {w}" for w in warns]
+    else:
+        lines.append(f"✅ no regressions beyond {args.threshold:.0%} vs the "
+                     "previous run")
+    if infos:
+        lines.append("")
+        lines += [f"- {i}" for i in infos]
+    out = "\n".join(lines)
+    print(out)
+    if args.summary_out:
+        with open(args.summary_out, "a") as f:
+            f.write(out + "\n")
+    return 0  # fail-soft by contract
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -69,6 +69,32 @@ def main(fast: bool = False) -> list[str]:
         out.append(
             f"kernel,decode_attn,T{t},{ms:.2f},{decode_traffic_ratio(t, hq, hkv, d):.2f}"
         )
+    # ledger scatter: the XLA/ref-path wall time the Pallas kernel replaces,
+    # plus which scatter variant the batch-size dispatch picks and the
+    # analytic per-item vector-work ratio of the block tiling (each item
+    # touches one table tile instead of the whole [rows, 128] table).
+    from repro.core.history import HistoryConfig
+    from repro.core.device_ledger import init_state, record_priority
+    from repro.kernels.ledger import BLOCK_TILES, LANES, resolve_variant
+    from repro.kernels.ops import LEDGER_BLOCK_MIN_BATCH
+
+    cap = 1 << 14
+    lcfg = HistoryConfig(capacity=cap)
+    rows = cap // LANES
+    for b in ((64, 1024) if fast else (64, 1024, 4096)):
+        ids = jax.random.randint(jax.random.key(b), (b,), 0, 4 * cap, jnp.int32)
+        losses = jax.random.normal(jax.random.key(b + 1), (b,)) * 2 + 5
+        f = jax.jit(
+            lambda st, i, l: record_priority(lcfg, st, i, l, 3, impl="ref")
+        )
+        st = init_state(lcfg)
+        ms = _time(lambda i, l: f(st, i, l)[1], ids, losses)
+        var = resolve_variant(None, b, LEDGER_BLOCK_MIN_BATCH, rows)
+        tiles = min(BLOCK_TILES, rows) if var == "block" else 1
+        out.append(
+            f"kernel,ledger_scatter,C{cap}xB{b},{ms:.2f},"
+            f"{var}(tiles={tiles};work/item=1/{tiles})"
+        )
     # ssd: XLA chunked vs sequential-recurrence cost
     bsz, s, h, p, g, n = 2, 2048, 8, 64, 1, 64
     ks = jax.random.split(jax.random.key(0), 5)

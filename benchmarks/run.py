@@ -19,7 +19,8 @@ def main() -> int:
     ap.add_argument(
         "--only",
         default="",
-        help="comma-list: fig1,fig2,table3,selection,ledger,kernels,roofline",
+        help="comma-list: fig1,fig2,table3,selection,ledger,serving,"
+             "kernels,roofline",
     )
     args = ap.parse_args()
     fast = not args.full
@@ -43,6 +44,8 @@ def main() -> int:
         ("selection", "Selection micro-benchmark", selection_bench.main),
         ("ledger", "Recycle-ledger benchmark (host vs device vs pallas)",
          selection_bench.main_ledger),
+        ("serving", "Serving engine (continuous batching + record overhead)",
+         selection_bench.main_serving),
         ("kernels", "Kernel benchmark", kernel_bench.main),
         ("roofline", "Roofline (from dry-run artifacts)", roofline.main),
     ]

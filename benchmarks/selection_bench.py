@@ -162,14 +162,103 @@ def main_ledger(fast: bool = False) -> list[str]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# serving-engine benchmark (throughput + record overhead)
+# ---------------------------------------------------------------------------
+
+
+def _serving_run(cfg, params, slots, gen, prompt, waves, ledger, route,
+                 with_labels):
+    """Stream `waves` request waves through a fresh engine; returns
+    (us_per_step, tok_per_s) measured after a one-wave warmup (compiles
+    amortize — the nightly row trends the steady state)."""
+    from repro.core.history import HistoryConfig
+    from repro.data import DataConfig
+    from repro.data.pipeline import SyntheticLMStream
+    from repro.launch.mesh import make_elastic_mesh
+    from repro.serving import Engine, OutcomeRecorder
+
+    mesh = make_elastic_mesh() if route else None
+    rec = OutcomeRecorder(slots, gen, cfg.vocab_size, HistoryConfig(),
+                          ledger=ledger, mesh=mesh, route=route)
+    eng = Engine(cfg, params, rec, slots=slots, max_prompt=prompt,
+                 max_gen=gen)
+    stream = SyntheticLMStream(
+        DataConfig(slots, prompt + gen, cfg.vocab_size)
+    )
+
+    def wave(w):
+        raw = stream.batch(w)
+        for r in range(slots):
+            toks = raw["tokens"][r]
+            eng.submit(
+                toks[:prompt],
+                max_new=gen,
+                labels=toks[prompt:prompt + gen] if with_labels else None,
+                instance_id=int(raw["instance_id"][r]),
+            )
+
+    wave(0)
+    eng.run(max_steps=10_000)  # warmup: compiles prefill/insert/decode
+    tok0, step0 = eng.generated_tokens, eng.steps_run
+    for w in range(1, waves + 1):
+        wave(w)
+    t0 = time.perf_counter()
+    eng.run(max_steps=100_000)
+    dt = time.perf_counter() - t0
+    steps = eng.steps_run - step0
+    toks = eng.generated_tokens - tok0
+    return dt / max(steps, 1) * 1e6, toks / max(dt, 1e-9)
+
+
+def main_serving(fast: bool = False) -> list[str]:
+    """Continuous-batching engine cost: decode-only vs fused recording.
+
+    The decode-only row (no outcomes ever arrive, the record is fully
+    masked) is the engine's floor; the record rows price the fused
+    score+ledger-write against it — `device` one table, `routed` the
+    sharded table with the cross-shard exchange (identity off a multi-chip
+    mesh, so that row prices the routing machinery, not a network).
+    """
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.models import model as Mdl
+    from repro.models.params import materialize
+
+    cfg = configs.get_smoke("llama3-8b")
+    params = materialize(
+        Mdl.param_specs(cfg), jax.random.key(0), jnp.dtype(cfg.param_dtype)
+    )
+    slots, gen, prompt = (4, 8, 16) if fast else (8, 16, 32)
+    waves = 2 if fast else 3
+    rows = [
+        ("decode-only", "device", False, False),
+        ("record[device]", "device", False, True),
+        ("record[routed]", "device", True, True),
+    ]
+    out = ["table,path,slots,gen,us_per_step,tok_per_s"]
+    for name, ledger, route, lab in rows:
+        us, tps = _serving_run(cfg, params, slots, gen, prompt, waves,
+                               ledger, route, lab)
+        out.append(f"serving,{name},{slots},{gen},{us:.0f},{tps:.1f}")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--ledger", action="store_true",
                     help="run the recycle-ledger benchmark too")
+    ap.add_argument("--serving", action="store_true",
+                    help="run the serving-engine benchmark too")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only-ledger", action="store_true")
+    ap.add_argument("--only-serving", action="store_true")
     args = ap.parse_args()
-    lines = [] if args.only_ledger else main(args.fast)
+    only = args.only_ledger or args.only_serving
+    lines = [] if only else main(args.fast)
     if args.ledger or args.only_ledger:
         lines += main_ledger(args.fast)
+    if args.serving or args.only_serving:
+        lines += main_serving(args.fast)
     print("\n".join(lines))

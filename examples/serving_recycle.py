@@ -1,12 +1,18 @@
-"""The paper's production loop: serving forwards feed training selection.
+"""The paper's production loop, end to end: a serving ENGINE feeds training.
 
     PYTHONPATH=src python examples/serving_recycle.py
 
-"One backward from ten forward": a serving fleet already runs forward
-passes; record per-instance losses from them (LossHistory ledger), then
-train with `recycle_forward=True` — the train step SKIPS its selection
-forward entirely and selects on the recorded losses. This example runs
-both variants and compares per-step forward counts and losses.
+"One backward from ten forward": the serving fleet already runs forward
+passes. Here the real continuous-batching engine (`repro.serving`) serves
+every instance in the pool — requests stream through decode slots, the
+ground-truth continuations arrive as outcomes, and the OutcomeRecorder
+writes every generated position's loss into the device ledger inside the
+jitted decode step. Training then recycles that signal LIVE: a
+`RecycleFeed(ledger="engine")` joins each train batch against the
+engine's ledger handle (no .npz hop), and the OBFTF train step with
+`recycle_forward=True` SKIPS its selection forward entirely. The fresh-
+forward variant pays the selection forward every step; the comparison
+prints both losses and the training-side forward budget saved.
 """
 
 import dataclasses
@@ -17,68 +23,115 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core.history import LossHistory
-from repro.core.obftf import OBFTFConfig, make_eval_step, make_train_step
+from repro.core.history import HistoryConfig
+from repro.core.obftf import OBFTFConfig, make_train_step
 from repro.core.selection import SelectionConfig
-from repro.data import DataConfig, SyntheticLMStream
+from repro.data import DataConfig, RecycleFeed, SyntheticLMStream
 from repro.models import model as Mdl
 from repro.models.params import materialize
 from repro.optim import adamw, warmup_cosine
+from repro.serving import Engine, OutcomeRecorder, delayed_outcomes
+
+POOL = 32  # distinct instances; the serve pass scores every one of them
+BATCH, SEQ, RATIO, STEPS = 16, 64, 0.25, 60
+PROMPT, GEN, SLOTS = 16, 8, 8
 
 
-def run(recycle: bool, steps: int = 100):
-    cfg = dataclasses.replace(
+def smoke_cfg():
+    return dataclasses.replace(
         configs.get_smoke("llama3_8b"),
         num_layers=4, d_model=128, num_heads=4, num_kv_heads=2,
         head_dim=32, d_ff=384, vocab_size=4096,
     )
-    batch, seq, ratio = 16, 128, 0.25
+
+
+def serve_pool(cfg, params):
+    """Stream the whole instance pool through the engine once: the "ten
+    forward" side, paid for by production traffic. Outcomes (the true
+    continuations) arrive two steps after each admission."""
+    recorder = OutcomeRecorder(
+        SLOTS, GEN, cfg.vocab_size, HistoryConfig(), ledger="device"
+    )
+    engine = Engine(cfg, params, recorder, slots=SLOTS, max_prompt=PROMPT,
+                    max_gen=GEN)
+    stream = SyntheticLMStream(
+        DataConfig(SLOTS, PROMPT + GEN, cfg.vocab_size, instance_pool=POOL)
+    )
+    pending = {}
+    for wave in range(POOL // SLOTS):
+        raw = stream.batch(wave)
+        for r in range(SLOTS):
+            iid = engine.submit(
+                raw["tokens"][r][:PROMPT],
+                max_new=GEN,
+                instance_id=int(raw["instance_id"][r]),
+                expect_labels=True,
+            )
+            pending[iid] = raw["tokens"][r][PROMPT:PROMPT + GEN]
+
+    stats = engine.run(max_steps=5000,
+                       on_step=delayed_outcomes(pending, delay=2))
+    return engine, stats
+
+
+def train(cfg, params, recycle, engine=None):
     loss_fn = Mdl.loss_fn(cfg)
-    opt = adamw(warmup_cosine(1e-3, steps // 10, steps))
+    opt = adamw(warmup_cosine(1e-3, STEPS // 10, STEPS))
     obftf = OBFTFConfig(
-        selection=SelectionConfig(method="obftf", ratio=ratio),
+        selection=SelectionConfig(method="obftf", ratio=RATIO),
         recycle_forward=recycle,
     )
     train_step = jax.jit(make_train_step(loss_fn, opt, obftf))
-    score = jax.jit(make_eval_step(loss_fn))  # the "serving fleet" forward
-
     rng = jax.random.key(0)
-    params = materialize(Mdl.param_specs(cfg), rng)
     state = {"params": params, "opt": opt.init(params),
              "step": jnp.zeros((), jnp.int32)}
-    stream = SyntheticLMStream(DataConfig(batch, seq, cfg.vocab_size))
-    ledger = LossHistory()
-
-    fwd_tokens = 0  # tokens through training-side forward passes
-    losses = []
-    for step in range(steps):
-        raw = stream.batch(step)
+    stream = SyntheticLMStream(
+        DataConfig(BATCH, SEQ, cfg.vocab_size, instance_pool=POOL)
+    )
+    feed = (
+        RecycleFeed(stream, history=engine.ledger, ledger="engine")
+        if recycle else stream
+    )
+    fwd_tokens, losses, hits = 0, [], []
+    for step in range(STEPS):
+        raw = feed.batch(step)
         b = {"tokens": jnp.asarray(raw["tokens"]),
              "labels": jnp.asarray(raw["labels"])}
         if recycle:
-            # SERVING SIDE (cost already paid in production): score + record.
-            serving_losses = np.asarray(score(state["params"], b, rng))
-            ledger.record(raw["instance_id"], serving_losses, step)
-            ema, seen = ledger.lookup(raw["instance_id"])
-            b["recorded_loss"] = jnp.asarray(np.where(seen, ema, 1e3))
-            fwd_tokens += int(ratio * batch) * seq * 3  # bwd subset only
+            # the serving fleet already paid the scoring forward: join the
+            # LIVE engine ledger, backward subset only
+            b["recorded_loss"] = jnp.asarray(raw["recorded_loss"])
+            hits.append(raw["ledger_hit_rate"])
+            fwd_tokens += int(RATIO * BATCH) * SEQ * 3
         else:
-            fwd_tokens += batch * seq + int(ratio * batch) * seq * 3
+            fwd_tokens += BATCH * SEQ + int(RATIO * BATCH) * SEQ * 3
         rng, k = jax.random.split(rng)
         state, m = train_step(state, b, k)
         losses.append(float(m["loss"]))
-    return losses, fwd_tokens
+    return losses, fwd_tokens, hits
 
 
 def main():
     t0 = time.time()
-    fresh, cost_fresh = run(recycle=False)
-    rec, cost_rec = run(recycle=True)
+    cfg = smoke_cfg()
+    params = materialize(Mdl.param_specs(cfg), jax.random.key(0))
+
+    engine, stats = serve_pool(cfg, params)
+    print(
+        f"serving engine: {stats['evicted']} requests, "
+        f"{stats['recorded']} positions recorded "
+        f"({stats['generated_tokens']} decode tokens, "
+        f"{stats['steps']} fused steps, outcomes delivered late)"
+    )
+
+    fresh, cost_fresh, _ = train(cfg, params, recycle=False)
+    rec, cost_rec, hits = train(cfg, params, recycle=True, engine=engine)
     print(f"fresh-forward OBFTF : loss {fresh[0]:.3f} -> {fresh[-1]:.3f}  "
           f"training-side fwd-token-equivalents {cost_fresh/1e6:.2f}M")
-    print(f"recycled forwards   : loss {rec[0]:.3f} -> {rec[-1]:.3f}  "
-          f"training-side fwd-token-equivalents {cost_rec/1e6:.2f}M")
-    print(f"training-compute saved by recycling: "
+    print(f"recycled (engine)   : loss {rec[0]:.3f} -> {rec[-1]:.3f}  "
+          f"training-side fwd-token-equivalents {cost_rec/1e6:.2f}M  "
+          f"ledger hit rate {np.mean(hits):.2f}")
+    print(f"training-compute saved by recycling the fleet's forwards: "
           f"{(1 - cost_rec / cost_fresh) * 100:.0f}%  "
           f"({time.time()-t0:.0f}s total)")
 

@@ -118,6 +118,12 @@ class RecycleFeed:
     * ``"host"`` — the numpy ``LossHistory`` is probed at batch-build time
       and ``recorded_loss`` ships with the batch. Every step pays the
       device->host->device hop (the naive pipeline this repo started with).
+    * ``"engine"`` — same join, but ``history`` is a LIVE serving-engine
+      ledger handle (``repro.serving.EngineLedgerHandle``, or anything
+      with the same ``lookup(ids) -> (ema, seen)`` surface): the feed
+      reads the ledger the serving fleet is writing *right now* — the
+      paper's loop with no .npz hop in between. The handle snapshots the
+      device table lazily, so a feed batch never blocks the engine.
     * ``"device"`` — pass-through: batches carry only ``instance_id`` and
       the join runs *inside* the jitted train step against the
       device-resident ledger (``repro.core.device_ledger``), so the recycle
@@ -128,7 +134,7 @@ class RecycleFeed:
     must-see (cold-start behaves like uniform until the ledger warms).
     """
 
-    LEDGERS = ("host", "device")
+    LEDGERS = ("host", "engine", "device")
 
     def __init__(
         self,
@@ -138,8 +144,9 @@ class RecycleFeed:
         cold_loss: float = 1e3,
     ):
         assert ledger in self.LEDGERS, ledger
-        assert ledger == "device" or history is not None, \
-            "host ledger feed needs a LossHistory"
+        if ledger != "device":
+            assert history is not None and hasattr(history, "lookup"), \
+                f"{ledger} ledger feed needs a lookup-able history/handle"
         self.stream = stream
         self.history = history
         self.ledger = ledger
@@ -147,8 +154,9 @@ class RecycleFeed:
 
     def batch(self, step: int) -> dict[str, np.ndarray]:
         raw = self.stream.batch(step)
-        if self.ledger == "host":
+        if self.ledger in ("host", "engine"):
             ema, seen = self.history.lookup(raw["instance_id"])
+            ema, seen = np.asarray(ema), np.asarray(seen)
             raw["recorded_loss"] = np.where(
                 seen, ema, self.cold_loss
             ).astype(np.float32)

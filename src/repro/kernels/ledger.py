@@ -20,6 +20,27 @@ Table layout: [capacity] viewed as [capacity/128, 128] (lane-major). The
 whole table must fit VMEM — capacity <= ~2^18 slots (4 MB for the four
 arrays), which is the per-shard slice size under the sharded ledger, not
 the global capacity.
+
+Two variants share the semantics (dispatched by batch size in
+``repro.kernels.ops``; ``variant=`` forces one):
+
+* ``fori`` — one program, the whole table resident, one loop iteration
+  per batch item touching all [rows, 128] of it. Right for small batches,
+  where the loop is short and tiling overhead wouldn't pay.
+* ``block`` — the two-pass block-parallel variant for large batches: the
+  grid partitions the table into tiles, each program owns one tile and
+  makes two passes over the batch — a write pass (items predicated on
+  "my slot is in this tile", so each iteration's vector work is one
+  *tile*, 1/T of the table) and a priority pass against the updated tile
+  that read-modify-writes the shared [B] priority output. Per-item
+  vector work drops by the tile count; the table also no longer needs to
+  be VMEM-resident all at once, lifting the per-shard capacity ceiling.
+  NOTE: the grid runs with the default "arbitrary" (sequential)
+  dimension semantics, and pass 2 DEPENDS on that — program 0
+  initializes the shared priority block and every program RMWs it. Do
+  not mark the grid dimension "parallel" for Megacore without first
+  making pass 2's output core-local (e.g. per-tile partial outputs
+  combined outside the kernel).
 """
 
 from __future__ import annotations
@@ -123,6 +144,96 @@ def _ledger_kernel(
     )
 
 
+def _ledger_block_kernel(
+    step_ref,  # [1, 1] i32
+    ids_ref,  # [Bp, 1] i32
+    loss_ref,  # [Bp, 1] f32
+    valid_ref,  # [Bp, 1] i32
+    ema_in,  # [TR, 128] f32 — THIS program's table tile (pre-batch)
+    cnt_in,
+    ls_in,
+    own_in,
+    ema_out,
+    cnt_out,
+    ls_out,
+    own_out,
+    pri_ref,  # [Bp, 1] f32 — shared across programs (RMW per tile)
+    *,
+    batch: int,
+    capacity: int,
+    decay: float,
+    unseen_priority: float,
+    staleness_half_life: float,
+):
+    t = pl.program_id(0)
+    rows = ema_in.shape[0]
+    tile_slots = rows * LANES
+    base = t * tile_slots
+    row_iota = jax.lax.broadcasted_iota(I32, (rows, LANES), 0)
+    col_iota = jax.lax.broadcasted_iota(I32, (rows, LANES), 1)
+    step = step_ref[0, 0]
+
+    def slot_mask(i):
+        """(id, one-hot tile mask, slot-lives-in-this-tile)."""
+        idv = ids_ref[i, 0]
+        loc = slot_for_jnp(idv, capacity) - base
+        in_tile = (loc >= 0) & (loc < tile_slots)
+        mask = (
+            (row_iota == loc // LANES) & (col_iota == loc % LANES) & in_tile
+        )
+        return idv, mask, in_tile
+
+    def probe(mask, table):
+        return jnp.sum(jnp.where(mask, table, jnp.zeros_like(table)))
+
+    # pass 1: scatter updates into this tile only. Same snapshot semantics
+    # as the fori kernel (values from *_in, sequential last-write-wins);
+    # items homed to other tiles have an all-false mask and write nothing.
+    def write(i, carry):
+        ema, cnt, ls, own = carry
+        idv, mask, _ = slot_mask(i)
+        mask = mask & (valid_ref[i, 0] != 0)
+        loss = loss_ref[i, 0]
+        fresh = probe(mask, own_in[...]) != idv
+        prev = jnp.where(fresh, loss, probe(mask, ema_in[...]))
+        new_ema = decay * prev + (1.0 - decay) * loss
+        new_cnt = jnp.where(fresh, 1, probe(mask, cnt_in[...]) + 1)
+        return (
+            jnp.where(mask, new_ema, ema),
+            jnp.where(mask, new_cnt, cnt),
+            jnp.where(mask, step, ls),
+            jnp.where(mask, idv, own),
+        )
+
+    ema, cnt, ls, own = jax.lax.fori_loop(
+        0, batch, write, (ema_in[...], cnt_in[...], ls_in[...], own_in[...])
+    )
+    ema_out[...] = ema
+    cnt_out[...] = cnt
+    ls_out[...] = ls
+    own_out[...] = own
+
+    # pass 2: post-update priorities for the items homed to this tile,
+    # read-modify-written into the shared output (every item's slot lives
+    # in exactly one tile, so each entry is written exactly once; program
+    # 0 initializes the block first — TPU grids run sequentially).
+    @pl.when(t == 0)
+    def _init():
+        pri_ref[...] = jnp.full(pri_ref.shape, unseen_priority, F32)
+
+    pri_iota = jax.lax.broadcasted_iota(I32, pri_ref.shape, 0)
+
+    def score(i, pri):
+        idv, mask, in_tile = slot_mask(i)
+        seen = probe(mask, own) == idv
+        age = jnp.maximum(step - probe(mask, ls), 0).astype(F32)
+        boost = jnp.exp2(age / staleness_half_life)
+        val = jnp.where(seen, probe(mask, ema) * boost, unseen_priority)
+        return jnp.where((pri_iota == i) & in_tile, val, pri)
+
+    pri_ref[...] = jax.lax.fori_loop(0, batch, score, pri_ref[...])
+
+
 def _pad_rows(x, mult):
     pad = (-x.shape[0]) % mult
     if pad == 0:
@@ -130,10 +241,28 @@ def _pad_rows(x, mult):
     return jnp.pad(x, ((0, pad), (0, 0)))
 
 
+# Target number of table tiles for the block variant (power of two; the
+# actual count divides rows). More tiles = less vector work per item and a
+# smaller VMEM residency, but more sequential grid programs off-Megacore.
+BLOCK_TILES = 8
+
+
+def resolve_variant(variant: str | None, batch: int, batch_threshold: int,
+                    rows: int) -> str:
+    """Auto-dispatch: the block kernel pays off once the batch is large
+    enough that per-item whole-table vector work dominates, and only if
+    the table has enough rows to tile."""
+    if variant is not None:
+        assert variant in ("fori", "block"), variant
+        return variant
+    return "block" if batch >= batch_threshold and rows >= 2 else "fori"
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "decay", "unseen_priority", "staleness_half_life", "interpret"
+        "decay", "unseen_priority", "staleness_half_life", "interpret",
+        "variant", "batch_threshold",
     ),
 )
 def ledger_record_priority(
@@ -150,6 +279,8 @@ def ledger_record_priority(
     unseen_priority: float,
     staleness_half_life: float = float("inf"),
     interpret: bool = False,
+    variant: str | None = None,  # None = by batch size; "fori" | "block"
+    batch_threshold: int = 256,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """-> (ema', count', last_seen', owner', priority [B] f32)."""
     cap = ema.shape[0]
@@ -164,24 +295,57 @@ def ledger_record_priority(
     valid2 = _pad_rows(jnp.asarray(valid).astype(I32)[:, None], 8)
     bp = ids2.shape[0]
     step2 = jnp.asarray(step, I32).reshape(1, 1)
-    kernel = functools.partial(
-        _ledger_kernel,
-        batch=b,
-        decay=float(decay),
-        unseen_priority=float(unseen_priority),
-        staleness_half_life=float(staleness_half_life),
-    )
-    ema2, cnt2, ls2, own2, pri = pl.pallas_call(
-        kernel,
-        out_shape=[
-            jax.ShapeDtypeStruct(shape2d, F32),
-            jax.ShapeDtypeStruct(shape2d, I32),
-            jax.ShapeDtypeStruct(shape2d, I32),
-            jax.ShapeDtypeStruct(shape2d, I32),
-            jax.ShapeDtypeStruct((bp, 1), F32),
-        ],
-        interpret=interpret,
-    )(
+    variant = resolve_variant(variant, b, batch_threshold, rows)
+    out_shape = [
+        jax.ShapeDtypeStruct(shape2d, F32),
+        jax.ShapeDtypeStruct(shape2d, I32),
+        jax.ShapeDtypeStruct(shape2d, I32),
+        jax.ShapeDtypeStruct(shape2d, I32),
+        jax.ShapeDtypeStruct((bp, 1), F32),
+    ]
+    if variant == "fori":
+        kernel = functools.partial(
+            _ledger_kernel,
+            batch=b,
+            decay=float(decay),
+            unseen_priority=float(unseen_priority),
+            staleness_half_life=float(staleness_half_life),
+        )
+        call = pl.pallas_call(kernel, out_shape=out_shape,
+                              interpret=interpret)
+    else:
+        tiles = min(BLOCK_TILES, rows)
+        tile_rows = rows // tiles
+        kernel = functools.partial(
+            _ledger_block_kernel,
+            batch=b,
+            capacity=cap,
+            decay=float(decay),
+            unseen_priority=float(unseen_priority),
+            staleness_half_life=float(staleness_half_life),
+        )
+        whole = lambda t: (0, 0)  # one shared block for batch-shaped args
+        tile = pl.BlockSpec((tile_rows, LANES), lambda t: (t, 0))
+        call = pl.pallas_call(
+            kernel,
+            grid=(tiles,),
+            in_specs=[
+                pl.BlockSpec((1, 1), whole),
+                pl.BlockSpec((bp, 1), whole),
+                pl.BlockSpec((bp, 1), whole),
+                pl.BlockSpec((bp, 1), whole),
+                tile,
+                tile,
+                tile,
+                tile,
+            ],
+            out_specs=[
+                tile, tile, tile, tile, pl.BlockSpec((bp, 1), whole),
+            ],
+            out_shape=out_shape,
+            interpret=interpret,
+        )
+    ema2, cnt2, ls2, own2, pri = call(
         step2,
         ids2,
         loss2,

@@ -106,6 +106,11 @@ def decode_attn(
 # differentiable quantity; it is stop_gradient state by construction)
 # ---------------------------------------------------------------------------
 
+# Batches at or above this size dispatch the two-pass block-parallel
+# scatter (grid over table tiles); below it, the single-program fori-loop
+# kernel (shorter loop, no tiling overhead). See repro.kernels.ledger.
+LEDGER_BLOCK_MIN_BATCH = 256
+
 
 def ledger_record_priority(
     ema: jax.Array,
@@ -121,13 +126,17 @@ def ledger_record_priority(
     staleness_half_life: float = float("inf"),
     valid: Optional[jax.Array] = None,
     impl: Optional[str] = None,
+    variant: Optional[str] = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """One-pass ledger transaction -> (ema', count', last_seen', owner', pri).
 
     ``valid`` ([B] bool) masks the write (dropped items are still scored);
     ``staleness_half_life`` feeds the priority's exp2(age/half_life) boost
     (inf = no boost, the pre-mask behavior where every scored id was just
-    recorded at age 0).
+    recorded at age 0). On the Pallas path, ``variant`` picks the scatter
+    kernel: None dispatches by batch size (>= LEDGER_BLOCK_MIN_BATCH items
+    takes the two-pass block-parallel tiling, below it the single-program
+    fori loop); "fori"/"block" force one.
     """
     impl = _resolve(impl)
     if impl == "ref":
@@ -142,6 +151,8 @@ def ledger_record_priority(
         unseen_priority=unseen_priority,
         staleness_half_life=staleness_half_life,
         interpret=(impl == "interpret"),
+        variant=variant,
+        batch_threshold=LEDGER_BLOCK_MIN_BATCH,
     )
 
 

@@ -1,19 +1,31 @@
-"""Serving driver: batched decode + the paper's loss-recording hook.
+"""Serving driver: a thin CLI over the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
-        --batch 8 --prompt-len 32 --gen 32
+        --batch 8 --prompt-len 32 --gen 32 --requests 24 --ledger device
 
 This is the "ten forward" side of the title: the serving fleet runs
 forwards anyway; when ground-truth labels arrive (clicks, ratings, next
-events), `record_outcome` computes per-instance losses from the logits we
-already paid for and writes them to the LossHistory ledger. The training
-side (`--recycle` in launch.train) then selects with NO extra selection
-forward — one backward from ten (already-run) forwards.
+events), the engine's OutcomeRecorder scores the logits we already paid
+for and records per-instance losses into the LossHistory ledger — every
+generated position, against a stable monotone instance id, inside the
+jitted decode step (no host hop; ``--ledger-route`` shards + routes the
+table over the mesh). The training side (`--recycle` in launch.train)
+then selects with NO extra selection forward — one backward from ten
+(already-run) forwards.
+
+Requests come from the same deterministic SyntheticLMStream the trainer
+feeds on, carrying the SAME instance ids — so the ledger this driver
+writes (``--ledger-out``) is directly consumable by
+``train --recycle --ledger-in`` (and vice versa: ``--ledger-in`` accepts a
+train checkpoint's ledger.npz). ``--outcome-delay`` delivers each
+request's labels N engine steps after admission instead of at submit,
+exercising the late-outcome path a real fleet lives on.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -22,29 +34,106 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core.device_ledger import DeviceLedger
-from repro.core.history import LossHistory
+from repro.core.history import HistoryConfig
+from repro.data import DataConfig, SyntheticLMStream
+from repro.launch.mesh import make_elastic_mesh
 from repro.models import model as Mdl
 from repro.models.params import materialize
+from repro.serving import Engine, OutcomeRecorder, delayed_outcomes, pad_safe
 
 
-def sample_batch(rng, cfg, batch, prompt_len):
-    toks = jax.random.randint(rng, (batch, prompt_len), 0, cfg.vocab_size)
-    ids = np.arange(batch, dtype=np.int64)
-    return toks.astype(jnp.int32), ids
+def build_engine(args, cfg, params):
+    mesh = make_elastic_mesh() if args.ledger_route else None
+    if args.ledger_route and args.ledger != "device":
+        raise SystemExit("--ledger-route requires --ledger device")
+    recorder = OutcomeRecorder(
+        args.batch,
+        args.gen,
+        cfg.vocab_size,
+        HistoryConfig(),
+        ledger=args.ledger,
+        mesh=mesh,
+        route=args.ledger_route,
+    )
+    return Engine(
+        cfg,
+        params,
+        recorder,
+        slots=args.batch,
+        max_prompt=args.prompt_len,
+        max_gen=args.gen,
+    )
+
+
+def submit_stream(engine, args, cfg):
+    """Queue --requests requests off the deterministic synthetic stream.
+
+    Prompt lengths vary per row (pad-safe families exercise the bucketed
+    prefill; others keep the full length — exact-length compile), labels
+    are the stream's ground-truth continuation, instance ids are the
+    stream's own (stable across serve runs and shared with the trainer's
+    feed).
+    """
+    stream = SyntheticLMStream(
+        DataConfig(
+            args.batch,
+            args.prompt_len + args.gen,
+            cfg.vocab_size,
+            seed=args.seed,
+            instance_pool=args.instance_pool,
+        )
+    )
+    waves = -(-args.requests // args.batch)
+    vary = pad_safe(cfg) and args.prompt_len >= 8
+    n = 0
+    submitted = []
+    for w in range(waves):
+        raw = stream.batch(w)
+        for r in range(args.batch):
+            if n >= args.requests:
+                break
+            plen = args.prompt_len - (r % 4) * (args.prompt_len // 8) if vary \
+                else args.prompt_len
+            toks = raw["tokens"][r]
+            labels = toks[plen : plen + args.gen]
+            iid = engine.submit(
+                toks[:plen],
+                max_new=len(labels),
+                labels=None if args.outcome_delay else labels,
+                instance_id=int(raw["instance_id"][r]),
+                expect_labels=bool(args.outcome_delay),
+            )
+            submitted.append((iid, labels))
+            n += 1
+    return waves, submitted
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="decode slots (the fixed-size continuous batch)")
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32,
+                    help="max new tokens per request")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="requests to stream through the engine "
+                         "(0 = 3 waves, i.e. 3x --batch)")
+    ap.add_argument("--outcome-delay", type=int, default=0,
+                    help="deliver each request's labels N engine steps "
+                         "after admission (0 = attach at submit) — the "
+                         "late-outcome serving path")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--instance-pool", type=int, default=1 << 20,
+                    help="distinct stream instance ids before reuse")
     ap.add_argument("--ledger", default="host", choices=("host", "device"),
                     help="record outcomes into the host numpy ledger or the "
                          "device-resident one (no host transfer per record)")
+    ap.add_argument("--ledger-route", action="store_true",
+                    help="shard the device ledger over the mesh and route "
+                         "each record to the shard owning its global slot "
+                         "(sharded_ledger_ops(route=True) inside the step)")
     ap.add_argument("--ledger-out", default="",
                     help="save the ledger state_dict as .npz (interchange "
                          "format shared by host and device ledgers and by "
@@ -54,78 +143,73 @@ def main(argv=None) -> int:
                     help="warm-start from an .npz state_dict (e.g. a train "
                          "checkpoint's ledger.npz), so serving-time records "
                          "accumulate on top of the trainer's signal")
+    ap.add_argument("--json-out", default="",
+                    help="write a run summary (throughput, records, ledger "
+                         "stats) as JSON")
     args = ap.parse_args(argv)
+    if args.requests <= 0:
+        args.requests = 3 * args.batch
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     rng = jax.random.key(args.seed)
     params = materialize(Mdl.param_specs(cfg), rng, jnp.dtype(cfg.param_dtype))
-    max_seq = args.prompt_len + args.gen
+    engine = build_engine(args, cfg, params)
 
-    prefill = jax.jit(
-        lambda p, t: Mdl.prefill(p, cfg, t, max_seq=max_seq)
-    )
-    decode = jax.jit(
-        lambda p, c, t, pos: Mdl.decode_step(p, cfg, c, t, pos)
-    )
-
-    history = DeviceLedger() if args.ledger == "device" else LossHistory()
     if args.ledger_in:
-        history.load_state_dict(dict(np.load(args.ledger_in)))
-        live = int((np.asarray(history.state_dict()["owner"]) >= 0).sum())
+        engine.load_ledger_state_dict(dict(np.load(args.ledger_in)))
+        live = int((np.asarray(engine.ledger_state_dict()["owner"]) >= 0).sum())
         print(f"ledger warm-start from {args.ledger_in} ({live} live slots)")
-    toks, ids = sample_batch(rng, cfg, args.batch, args.prompt_len)
+
+    waves, submitted = submit_stream(engine, args, cfg)
+    shards = engine.recorder.ops.shards if engine.recorder.ops else 1
+    print(
+        f"arch={cfg.name} slots={args.batch} requests={args.requests} "
+        f"({waves} waves) gen<= {args.gen} ledger={args.ledger}"
+        + (f"[routed x{shards}]" if args.ledger_route else "")
+    )
+
+    on_step = (
+        delayed_outcomes(submitted, args.outcome_delay)  # pairs: dup ids ok
+        if args.outcome_delay else None
+    )
 
     t0 = time.time()
-    logits, cache = prefill(params, toks)
-    out_tokens = []
-    logits_seq = [logits]
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    for i in range(args.gen - 1):
-        out_tokens.append(tok)
-        logits, cache = decode(
-            params, cache, tok, jnp.asarray(args.prompt_len + i, jnp.int32)
-        )
-        logits_seq.append(logits)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    out_tokens.append(tok)
-    gen = jnp.concatenate(out_tokens, axis=1)
-    jax.block_until_ready(gen)
+    stats = engine.run(max_steps=100_000, on_step=on_step)
     dt = time.time() - t0
+    tok_s = stats["generated_tokens"] / max(dt, 1e-9)
     print(
-        f"served {args.batch} seqs x {args.gen} tokens in {dt:.2f}s "
-        f"({args.batch * args.gen / dt:.1f} tok/s)"
+        f"served {stats['evicted']} requests, "
+        f"{stats['generated_tokens']} decode tokens in {dt:.2f}s "
+        f"({tok_s:.1f} tok/s, {stats['steps']} engine steps)"
     )
 
-    # --- the paper's hook: outcomes arrive later; score the forwards we
-    # already ran and record per-instance losses into the ledger.
-    def record_outcome(step_logits, true_next, step):
-        lse = jax.nn.logsumexp(step_logits.astype(jnp.float32), axis=-1)
-        picked = jnp.take_along_axis(
-            step_logits.astype(jnp.float32), true_next[:, None], axis=-1
-        )[:, 0]
-        loss = lse - picked
-        if args.ledger == "device":
-            # jitted scatter into the device table; the loss never leaves
-            # the accelerator on its way to the ledger
-            history.record(jnp.asarray(ids.astype(np.int32)), loss, step)
-            return np.asarray(loss)  # host copy for reporting only
-        loss = np.asarray(loss)
-        history.record(ids, loss, step)
-        return loss
-
-    true_next = jax.random.randint(rng, (args.batch,), 0, cfg.vocab_size)
-    loss = record_outcome(logits_seq[0], true_next, step=0)
-    ema, seen = history.lookup(ids)
+    ids = np.asarray([iid for iid, _ in submitted], np.int64)
+    ema, seen = engine.ledger.lookup(ids)
     print(
-        f"recorded serving losses: mean={loss.mean():.3f}; "
-        f"ledger hit rate={np.asarray(seen).mean():.2f}"
+        f"recorded serving losses: {stats['recorded']} positions, "
+        f"mean ema={float(np.asarray(ema)[np.asarray(seen)].mean() if np.asarray(seen).any() else 0):.3f}; "
+        f"ledger hit rate={float(np.asarray(seen).mean()):.2f}"
     )
     if args.ledger_out:
-        np.savez(args.ledger_out, **history.state_dict())
+        sd = engine.ledger_state_dict()
+        np.savez(args.ledger_out, **sd)
         print(f"ledger saved to {args.ledger_out} ({args.ledger} layout)")
     print("sample generations (token ids):")
-    for row in np.asarray(gen[:2, :12]):
-        print("  ", row.tolist())
+    for iid in list(engine.finished)[:2]:
+        print("  ", engine.finished[iid][:12].tolist())
+    if args.json_out:
+        summary = dict(
+            stats,
+            tok_per_s=tok_s,
+            waves=waves,
+            ledger=args.ledger,
+            routed=bool(args.ledger_route),
+            shards=shards,
+            hit_rate=float(np.asarray(seen).mean()),
+            outcome_delay=args.outcome_delay,
+        )
+        with open(args.json_out, "w") as f:
+            json.dump(summary, f)
     return 0
 
 

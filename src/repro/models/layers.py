@@ -42,7 +42,10 @@ def rmsnorm_spec(d: int, axis: Optional[str] = "embed") -> ParamSpec:
 
 
 def rope(x: Array, positions: Array, theta: float) -> Array:
-    """Rotary embedding over the last dim. x [..., S, H, D]; positions [S]."""
+    """Rotary embedding over the last dim. x [..., S, H, D]; positions [S]
+    (shared across the batch) or [B, S] (per-example positions — the
+    continuous-batching decode path, where every slot sits at its own
+    depth)."""
     d = x.shape[-1]
     inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=F32) / d))
     ang = positions.astype(F32)[..., None] * inv  # [S, D/2]
@@ -277,37 +280,50 @@ def gqa_fill_cache(
 def gqa_decode(
     x: Array, p: dict, cfg: ModelConfig, cache: dict, pos: Array, max_seq: int
 ) -> tuple[Array, dict]:
-    """Single-token decode. x [B,1,D]; pos scalar (tokens seen so far)."""
+    """Single-token decode. x [B,1,D]; pos = tokens seen so far, a scalar
+    (whole batch at one depth, the lockstep path) or a [B] vector (every
+    slot at its own depth — the continuous-batching serving engine)."""
     t = gqa_cache_len(cfg, max_seq)
-    q, k, v = _qkv(x, p, cfg, pos[None] if pos.ndim == 0 else pos)
+    per_slot = pos.ndim == 1 and pos.shape[0] == x.shape[0]
+    rope_pos = pos[:, None] if per_slot else (
+        pos[None] if pos.ndim == 0 else pos
+    )
+    q, k, v = _qkv(x, p, cfg, rope_pos)
     slot = pos % t
+    if per_slot:
+        bidx = jnp.arange(x.shape[0])
+
+        def upd(c, n):  # batched one-row scatter: row `slot[b]` of example b
+            return c.at[bidx, slot].set(n[:, 0])
+    else:
+
+        def upd(c, n):
+            return jax.lax.dynamic_update_slice_in_dim(c, n, slot, axis=1)
+
     int8_cache = cfg.kv_cache_dtype == "int8"
     if int8_cache:
         qk, sk = _kv_quant(k)
         qv, sv = _kv_quant(v)
         new_cache = {
-            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], qk, slot, 1),
-            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], qv, slot, 1),
-            "k_scale": jax.lax.dynamic_update_slice_in_dim(
-                cache["k_scale"], sk, slot, 1
-            ),
-            "v_scale": jax.lax.dynamic_update_slice_in_dim(
-                cache["v_scale"], sv, slot, 1
-            ),
+            "k": upd(cache["k"], qk),
+            "v": upd(cache["v"], qv),
+            "k_scale": upd(cache["k_scale"], sk),
+            "v_scale": upd(cache["v_scale"], sv),
         }
         ck = _kv_dequant(new_cache["k"], new_cache["k_scale"], x.dtype)
         cv = _kv_dequant(new_cache["v"], new_cache["v_scale"], x.dtype)
     else:
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        ck = upd(cache["k"], k)
+        cv = upd(cache["v"], v)
         new_cache = {"k": ck, "v": cv}
     # slot j holds position pos - ((pos - j) mod t); valid if within window
     j = jnp.arange(t)
-    slot_pos = pos - jnp.mod(pos - j, t)
+    posq = pos[:, None] if per_slot else pos  # [B,1] or scalar
+    slot_pos = posq - jnp.mod(posq - j, t)  # [B,T] or [T]
     valid = slot_pos >= 0
     if cfg.sliding_window is not None:
-        valid &= slot_pos > pos - cfg.sliding_window
-    keep = valid[None, :]  # [S_q=1, T]
+        valid &= slot_pos > posq - cfg.sliding_window
+    keep = valid[:, None, :] if per_slot else valid[None, :]  # [B,1,T]/[1,T]
     out = _gqa_core(q, ck, cv, keep, cfg.num_heads)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return out, new_cache
@@ -428,10 +444,23 @@ def mla_decode(
     """
     dt = x.dtype
     nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
-    q_nope, q_pe = _mla_q(x, p, cfg, pos[None] if pos.ndim == 0 else pos)
-    ckv_new, kpe_new = _mla_kv_latent(x, p, cfg, pos[None] if pos.ndim == 0 else pos)
-    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, axis=1)
-    kpe = jax.lax.dynamic_update_slice_in_dim(cache["kpe"], kpe_new, pos, axis=1)
+    per_slot = pos.ndim == 1 and pos.shape[0] == x.shape[0]
+    rope_pos = pos[:, None] if per_slot else (
+        pos[None] if pos.ndim == 0 else pos
+    )
+    q_nope, q_pe = _mla_q(x, p, cfg, rope_pos)
+    ckv_new, kpe_new = _mla_kv_latent(x, p, cfg, rope_pos)
+    if per_slot:
+        bidx = jnp.arange(x.shape[0])
+        ckv = cache["ckv"].at[bidx, pos].set(ckv_new[:, 0])
+        kpe = cache["kpe"].at[bidx, pos].set(kpe_new[:, 0])
+    else:
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv_new, pos, axis=1
+        )
+        kpe = jax.lax.dynamic_update_slice_in_dim(
+            cache["kpe"], kpe_new, pos, axis=1
+        )
 
     wkv_k = p["wkv_b"][..., :nope].astype(dt)  # [R, H, nope]
     wkv_v = p["wkv_b"][..., nope:].astype(dt)  # [R, H, vd]
@@ -441,8 +470,12 @@ def mla_decode(
         jnp.einsum("bshr,btr->bhst", q_lat, ckv, preferred_element_type=F32)
         + jnp.einsum("bshk,btk->bhst", q_pe, kpe, preferred_element_type=F32)
     ) * scale
-    valid = jnp.arange(max_seq)[None, :] <= pos  # [1, T]
-    scores = jnp.where(valid[None, None], scores, _MASK_VALUE)
+    if per_slot:
+        valid = jnp.arange(max_seq)[None, :] <= pos[:, None]  # [B, T]
+        scores = jnp.where(valid[:, None, None], scores, _MASK_VALUE)
+    else:
+        valid = jnp.arange(max_seq)[None, :] <= pos  # [1, T]
+        scores = jnp.where(valid[None, None], scores, _MASK_VALUE)
     w = jax.nn.softmax(scores, axis=-1).astype(dt)
     ctx = jnp.einsum("bhst,btr->bshr", w, ckv)
     out = jnp.einsum("bshr,rhv->bshv", ctx, wkv_v)

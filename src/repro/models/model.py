@@ -376,11 +376,17 @@ def prefill(
     tokens: Array,
     max_seq: int,
     prefix: Optional[Array] = None,
+    last_pos: Optional[Array] = None,
 ) -> tuple[Array, dict]:
     """Full-sequence forward building the decode cache.
 
     Returns (last-position logits [B,V], cache). `max_seq` is the cache
-    capacity (>= prompt length + generated tokens).
+    capacity (>= prompt length + generated tokens). `last_pos` ([B] int,
+    optional) returns each example's logits at its own final position
+    instead of the shared last one — the right-padded-prompt case of the
+    continuous-batching engine, where row b's real prompt ends at
+    `last_pos[b]` and positions beyond it are pad (their K/V rows land in
+    the cache but decode's position-validity mask never attends to them).
     """
     x = embed_tokens(params, cfg, tokens, prefix)
     x = activation_constraint(x, "residual")
@@ -422,7 +428,12 @@ def prefill(
         raise NotImplementedError(cfg.family)
 
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = unembed(params, cfg, x[:, -1:, :])[:, 0, :]
+    if last_pos is None:
+        last = x[:, -1:, :]
+    else:
+        idx = jnp.asarray(last_pos, jnp.int32)[:, None, None]
+        last = jnp.take_along_axis(x, idx, axis=1)
+    logits = unembed(params, cfg, last)[:, 0, :]
     return logits, cache
 
 
@@ -450,7 +461,14 @@ def _ssm_block_decode(x, p, cfg, cache):
 def decode_step(
     params: dict, cfg: ModelConfig, cache: dict, tokens: Array, pos: Array
 ) -> tuple[Array, dict]:
-    """One decode step: tokens [B,1], pos scalar -> (logits [B,V], cache)."""
+    """One decode step: tokens [B,1] -> (logits [B,V], cache).
+
+    ``pos`` is the number of tokens already in the cache: a scalar when the
+    whole batch decodes in lockstep, or a [B] vector when every row sits at
+    its own depth (the continuous-batching engine). Attention families
+    thread it through to the per-row cache scatter + validity mask; SSM
+    recurrences are position-free and ignore it.
+    """
     x = embed_tokens(params, cfg, tokens, None)
     new_cache: dict = {}
 

@@ -1,0 +1,23 @@
+"""Serving subsystem: continuous batching + fused outcome recording.
+
+The paper's "ten forward" side as a real engine: requests stream through a
+fixed-size decode batch (slot admission, per-slot depth, eviction on
+completion) while an OutcomeRecorder scores late-arriving labels against
+the retained forwards and records per-instance losses into the (optionally
+sharded + routed) device ledger — inside the jitted decode step,
+transfer-free. See docs/serving_engine.md.
+"""
+
+from repro.serving.engine import (  # noqa: F401
+    Engine,
+    EngineLedgerHandle,
+    EngineState,
+    Request,
+    delayed_outcomes,
+    insert_cache_slot,
+    pad_safe,
+)
+from repro.serving.recorder import (  # noqa: F401
+    OutcomeRecorder,
+    RecorderState,
+)

@@ -1,0 +1,580 @@
+"""Continuous-batching serving engine with fused outcome recording.
+
+The "ten forward" side of the paper, grown from the one-shot demo into a
+real subsystem: a fixed-size decode batch of ``slots`` that requests flow
+through continuously —
+
+* **admission**: a queued request takes a free slot; its prompt runs
+  through a jitted prefill (batch 1, right-padded to a length bucket when
+  the family permits) and the resulting KV/state cache is scattered into
+  the slot's row of the batch cache (``insert`` — one jit);
+* **decode**: ONE fused jitted step advances every occupied slot by one
+  token at its own depth (``pos`` is a per-slot vector; see
+  ``models.layers`` decode), retains the logits, and lets the
+  :class:`~repro.serving.recorder.OutcomeRecorder` score + record the
+  oldest labeled-but-unscored position of each slot into the (optionally
+  sharded + routed) device ledger — the whole data plane is device-resident
+  and the step raises nothing under ``jax.transfer_guard("disallow")``;
+* **eviction**: a slot frees when its generation finished AND its outcome
+  backlog drained (labels scored), returning the generated tokens.
+
+Instance ids are **stable and globally monotone**: ``submit`` assigns
+``id_start + k * id_stride`` (stride = number of engines in a fleet keeps
+ids disjoint across hosts), never a per-batch ``arange`` — so records from
+different requests can never collide in the ledger under the same id.
+
+Control plane (queueing, admission, eviction, label bookkeeping) is host
+Python between steps, like any serving scheduler; the data plane
+(decode, retention, scoring, ledger) is the fused jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.history import LossHistory
+from repro.models import model as Mdl
+from repro.models.config import ModelConfig
+from repro.serving.recorder import OutcomeRecorder, RecorderState
+
+Array = jax.Array
+I32 = jnp.int32
+
+# Families where a right-padded prompt cannot perturb real positions:
+# causal attention only (no recurrent state integrating pads, no MoE
+# capacity competition, no rolling sliding-window cache layout).
+_PAD_SAFE_FAMILIES = ("dense", "vlm", "audio")
+
+
+def pad_safe(cfg: ModelConfig) -> bool:
+    return cfg.family in _PAD_SAFE_FAMILIES and cfg.sliding_window is None
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request. ``labels`` (ground-truth continuation) may be
+    attached now or delivered later via ``Engine.deliver_outcome``;
+    ``expect_labels`` holds the slot open (after generation) until they
+    arrive, so late outcomes within the residency window are never lost."""
+
+    prompt: np.ndarray
+    max_new: int
+    instance_id: int
+    labels: Optional[np.ndarray] = None
+    expect_labels: bool = False
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EngineState:
+    """Per-slot device state (a pytree). ``inst == -1`` marks a free slot."""
+
+    cache: Any  # model decode cache, batch dim = slots
+    cur_tok: Array  # [S, 1] next input token
+    pos: Array  # [S] tokens already in the cache (per-slot depth)
+    gen_idx: Array  # [S] generated positions produced so far
+    inst: Array  # [S] instance id, -1 = free
+    prompt_len: Array  # [S]
+    max_new: Array  # [S]
+    out_toks: Array  # [S, G] generated tokens
+    step: Array  # [] i32 monotone decode-step counter (= ledger step)
+
+    def tree_flatten(self):
+        return (
+            self.cache, self.cur_tok, self.pos, self.gen_idx, self.inst,
+            self.prompt_len, self.max_new, self.out_toks, self.step,
+        ), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _cache_batch_axis(cfg: ModelConfig, key: str) -> int:
+    # hybrid stacks ssm blocks [groups, every, batch, ...]; everything else
+    # is [layers, batch, ...]
+    return 2 if (cfg.family == "hybrid" and key == "blocks") else 1
+
+
+def insert_cache_slot(
+    cfg: ModelConfig, cache: dict, new: dict, slot: Array
+) -> dict:
+    """Scatter a batch-1 prefill cache into row ``slot`` of the batch cache."""
+    out = {}
+    for key, sub in cache.items():
+        ax = _cache_batch_axis(cfg, key)
+        out[key] = jax.tree.map(
+            lambda c, n, a=ax: jax.lax.dynamic_update_index_in_dim(
+                c, jax.lax.index_in_dim(n, 0, a, keepdims=False), slot, a
+            ),
+            sub,
+            new[key],
+        )
+    return out
+
+
+class Engine:
+    """Continuous batching over a request queue (see module docstring).
+
+    ``recorder`` owns ledger placement; ``prompt_buckets`` pads prompts up
+    to the nearest bucket so distinct lengths share one prefill compile
+    (pad-safe families only — recurrent/MoE/windowed families prefill at
+    exact length, one compile per distinct length).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        recorder: OutcomeRecorder,
+        *,
+        slots: int = 8,
+        max_prompt: int = 64,
+        max_gen: Optional[int] = None,
+        prompt_buckets: Optional[Sequence[int]] = None,
+        id_start: int = 0,
+        id_stride: int = 1,
+        pad_token: int = 0,
+        guard_transfers: bool = True,
+    ):
+        self.cfg = cfg
+        self.recorder = recorder  # self.params set below (mesh-replicated)
+        self.slots = slots
+        self.max_prompt = max_prompt
+        self.max_gen = max_gen if max_gen is not None else recorder.max_gen
+        assert self.max_gen <= recorder.max_gen, (
+            self.max_gen, recorder.max_gen,
+        )
+        assert recorder.slots == slots, (recorder.slots, slots)
+        self.max_seq = max_prompt + self.max_gen
+        self.pad_token = pad_token
+        self.guard_transfers = guard_transfers
+        if prompt_buckets is None and pad_safe(cfg):
+            b, buckets = 8, []
+            while b < max_prompt:
+                buckets.append(b)
+                b *= 2
+            prompt_buckets = (*buckets, max_prompt)
+        if prompt_buckets is not None and not pad_safe(cfg):
+            raise ValueError(
+                f"{cfg.family} family (or sliding-window attention) cannot "
+                "right-pad prompts (pads perturb recurrent state / MoE "
+                "capacity / rolling caches); use exact-length prefill "
+                "(prompt_buckets=None)"
+            )
+        self.prompt_buckets = (
+            tuple(sorted(prompt_buckets)) if prompt_buckets else None
+        )
+
+        self._id_next = id_start
+        self._id_stride = id_stride
+        self._queue: list[Request] = []
+        self._slot_of: dict[int, int] = {}
+        self._free = list(range(slots))[::-1]  # pop() -> lowest slot first
+        self._await_labels: dict[int, bool] = {}
+        self._admission_seq: dict[int, int] = {}
+        # slots with labels delivered since the last fused step: their
+        # ``pending`` metric is stale (predates the delivery), so eviction
+        # holds until the next step has actually seen the labels
+        self._fresh_labels: set[int] = set()
+        self._last_metrics: Optional[dict] = None
+        self._warm = False
+        self._ledger_epoch = 0  # bumped on out-of-band ledger mutation
+
+        # results / counters
+        self.finished: dict[int, np.ndarray] = {}
+        self.generated_tokens = 0
+        self.admitted = 0
+        self.evicted = 0
+        self.steps_run = 0
+        self.missed_outcomes = 0
+
+        # sharded recorder: everything the guarded fused step touches must
+        # already live on the mesh (params + engine state replicated, the
+        # ledger sharded by ops.init) — otherwise the jit call would need
+        # an implicit reshard-transfer every step
+        self.params = recorder.replicate(params)
+        self._estate = recorder.replicate(self._init_state())
+        self._rstate = recorder.init_state()
+
+        self._prefill_jits: dict[int, Any] = {}
+        self._insert = jax.jit(self._insert_fn, donate_argnums=(0, 1))
+        # params go in as an ARGUMENT (closing over them would bake the
+        # weights into the jaxpr as constants)
+        self._decode = jax.jit(self._fused_step, donate_argnums=(1, 2))
+        self._deliver = jax.jit(
+            lambda rs, slot, row: self.recorder.deliver(rs, slot, row),
+            donate_argnums=(0,),
+        )
+
+    # -- device state --------------------------------------------------------
+
+    def _init_state(self) -> EngineState:
+        s, g = self.slots, self.max_gen
+        return EngineState(
+            cache=Mdl.init_cache(self.cfg, s, self.max_seq),
+            cur_tok=jnp.zeros((s, 1), I32),
+            pos=jnp.zeros((s,), I32),
+            gen_idx=jnp.zeros((s,), I32),
+            inst=jnp.full((s,), -1, I32),
+            prompt_len=jnp.zeros((s,), I32),
+            max_new=jnp.zeros((s,), I32),
+            out_toks=jnp.zeros((s, g), I32),
+            step=jnp.zeros((), I32),
+        )
+
+    def _prefill(self, padded_len: int):
+        fn = self._prefill_jits.get(padded_len)
+        if fn is None:
+            fn = jax.jit(
+                lambda p, t, lp: Mdl.prefill(
+                    p, self.cfg, t, max_seq=self.max_seq, last_pos=lp
+                )
+            )
+            self._prefill_jits[padded_len] = fn
+        return fn
+
+    def _insert_fn(
+        self, estate, rstate, new_cache, logits0, slot, inst, plen, max_new,
+        labels_row,
+    ):
+        cache = insert_cache_slot(self.cfg, estate.cache, new_cache, slot)
+        t0 = jnp.argmax(logits0[0]).astype(I32)
+        out_toks = estate.out_toks.at[slot].set(
+            jnp.zeros((self.max_gen,), I32)
+        )
+        out_toks = out_toks.at[slot, 0].set(t0)
+        estate = EngineState(
+            cache=cache,
+            cur_tok=estate.cur_tok.at[slot, 0].set(t0),
+            pos=estate.pos.at[slot].set(jnp.asarray(plen, I32)),
+            gen_idx=estate.gen_idx.at[slot].set(1),
+            inst=estate.inst.at[slot].set(jnp.asarray(inst, I32)),
+            prompt_len=estate.prompt_len.at[slot].set(jnp.asarray(plen, I32)),
+            max_new=estate.max_new.at[slot].set(jnp.asarray(max_new, I32)),
+            out_toks=out_toks,
+            step=estate.step,
+        )
+        rstate = self.recorder.clear_slot(rstate, slot, logits0[0], labels_row)
+        return estate, rstate
+
+    def _fused_step(self, params, estate: EngineState, rstate: RecorderState):
+        """Decode every slot one token + retain logits + score + record —
+        one jit, all inputs device-resident (transfer-free by design)."""
+        occupied = estate.inst >= 0
+        decoding = occupied & (estate.gen_idx < estate.max_new)
+        logits, cache = Mdl.decode_step(
+            params, self.cfg, estate.cache, estate.cur_tok, estate.pos
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(I32)
+        bidx = jnp.arange(self.slots)
+        tgt = jnp.where(decoding, estate.gen_idx, self.max_gen)
+        out_toks = estate.out_toks.at[bidx, tgt].set(nxt, mode="drop")
+        cur_tok = jnp.where(decoding[:, None], nxt[:, None], estate.cur_tok)
+        rstate = self.recorder.observe(rstate, estate.gen_idx, logits, decoding)
+        adv = decoding.astype(I32)
+        gen_idx = estate.gen_idx + adv
+        step = estate.step + 1
+        rstate, info = self.recorder.score_one(
+            rstate, estate.inst, gen_idx, step
+        )
+        new_es = EngineState(
+            cache=cache,
+            cur_tok=cur_tok,
+            pos=estate.pos + adv,
+            gen_idx=gen_idx,
+            inst=estate.inst,
+            prompt_len=estate.prompt_len,
+            max_new=estate.max_new,
+            out_toks=out_toks,
+            step=step,
+        )
+        metrics = {
+            "inst": estate.inst,
+            "occupied": occupied,
+            "decoding": decoding,
+            "gen_idx": gen_idx,
+            "finished": occupied & (gen_idx >= estate.max_new),
+            "pending": info["pending"],
+            "loss": info["loss"],
+            "loss_valid": info["valid"],
+            "n_recorded": rstate.n_recorded,
+        }
+        return new_es, rstate, metrics
+
+    # -- host API ------------------------------------------------------------
+
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new: Optional[int] = None,
+        labels: Optional[np.ndarray] = None,
+        instance_id: Optional[int] = None,
+        expect_labels: Optional[bool] = None,
+    ) -> int:
+        """Queue a request; returns its (monotone, stable) instance id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if not 0 < prompt.size <= self.max_prompt:
+            raise ValueError(
+                f"prompt length {prompt.size} not in (0, {self.max_prompt}]"
+            )
+        max_new = self.max_gen if max_new is None else max_new
+        if not 0 < max_new <= self.max_gen:
+            raise ValueError(f"max_new {max_new} not in (0, {self.max_gen}]")
+        if instance_id is None:
+            instance_id = self._id_next
+            self._id_next += self._id_stride
+        if expect_labels is None:
+            expect_labels = False
+        self._queue.append(
+            Request(prompt, max_new, int(instance_id),
+                    None if labels is None else np.asarray(labels, np.int64),
+                    bool(expect_labels))
+        )
+        return int(instance_id)
+
+    def deliver_outcome(self, instance_id: int, labels: np.ndarray) -> bool:
+        """Late labels for a (possibly still decoding) request. A request
+        still waiting in the queue gets them attached for admission; after
+        its slot left, they are dropped and counted missed."""
+        slot = self._slot_of.get(int(instance_id))
+        if slot is None:
+            for req in self._queue:  # not yet admitted: attach to request
+                if req.instance_id == int(instance_id) and req.labels is None:
+                    req.labels = np.asarray(labels, np.int64)
+                    req.expect_labels = False
+                    return True
+            self.missed_outcomes += 1
+            return False
+        row = np.full((self.recorder.max_gen,), -1, np.int64)
+        labels = np.asarray(labels, np.int64).reshape(-1)
+        row[: min(labels.size, row.size)] = labels[: row.size]
+        self._rstate = self._deliver(
+            self._rstate, slot, jnp.asarray(row.astype(np.int32))
+        )
+        self._await_labels[int(instance_id)] = False
+        self._fresh_labels.add(slot)
+        return True
+
+    def _bucket(self, n: int) -> int:
+        if self.prompt_buckets is None:
+            return n
+        for b in self.prompt_buckets:
+            if b >= n:
+                return b
+        return self.max_prompt
+
+    def _admit(self, req: Request) -> None:
+        slot = self._free.pop()
+        p = self._bucket(req.prompt.size)
+        toks = np.full((1, p), self.pad_token, np.int32)
+        toks[0, : req.prompt.size] = req.prompt
+        lp = np.asarray([req.prompt.size - 1], np.int32)
+        logits0, new_cache = self._prefill(p)(
+            self.params, jnp.asarray(toks), jnp.asarray(lp)
+        )
+        row = np.full((self.recorder.max_gen,), -1, np.int64)
+        if req.labels is not None:
+            row[: min(req.labels.size, req.max_new)] = req.labels[
+                : req.max_new
+            ]
+        self._estate, self._rstate = self._insert(
+            self._estate, self._rstate, new_cache, logits0,
+            slot, req.instance_id, req.prompt.size, req.max_new,
+            jnp.asarray(row.astype(np.int32)),
+        )
+        self._slot_of[req.instance_id] = slot
+        self._await_labels[req.instance_id] = req.expect_labels
+        self.admitted += 1
+        self._admission_seq[req.instance_id] = self.admitted
+
+    def _evict_done(self) -> None:
+        m = self._last_metrics
+        if m is None:
+            return
+        for inst, slot in list(self._slot_of.items()):
+            if (
+                m["finished"][slot]
+                and not m["pending"][slot]
+                and slot not in self._fresh_labels
+                and not self._await_labels.get(inst, False)
+            ):
+                gen = int(m["gen_idx"][slot])
+                toks = jax.device_get(self._estate.out_toks[slot, :gen])
+                self.finished[inst] = np.asarray(toks)
+                del self._slot_of[inst]
+                self._await_labels.pop(inst, None)
+                self._admission_seq.pop(inst, None)
+                self._free.append(slot)
+                self.evicted += 1
+
+    def in_flight_ids(self) -> tuple[int, ...]:
+        """Instance ids currently resident in a slot (admission order)."""
+        return tuple(self._slot_of)
+
+    def in_flight_admissions(self) -> tuple[tuple[int, int], ...]:
+        """(instance id, admission sequence number) per resident slot.
+        The sequence number distinguishes RESIDENCIES of a reused id —
+        an evict + readmit can happen within one tick, invisible to
+        ``in_flight_ids`` alone."""
+        return tuple(
+            (iid, self._admission_seq[iid]) for iid in self._slot_of
+        )
+
+    def step(self) -> Optional[dict]:
+        """One engine tick: evict -> admit -> fused decode+score+record."""
+        self._evict_done()
+        while self._free:
+            # a request whose instance id is already resident must wait for
+            # that slot to evict (two live slots under one id would corrupt
+            # _slot_of and leak the older slot); later requests may admit
+            # ahead of it
+            idx = next(
+                (i for i, r in enumerate(self._queue)
+                 if r.instance_id not in self._slot_of),
+                None,
+            )
+            if idx is None:
+                break
+            self._admit(self._queue.pop(idx))
+        if not self._slot_of:
+            return None
+        if self.guard_transfers and self._warm:
+            with jax.transfer_guard("disallow"):
+                out = self._decode(self.params, self._estate, self._rstate)
+        else:
+            out = self._decode(self.params, self._estate, self._rstate)
+            self._warm = True
+        self._estate, self._rstate, metrics = out
+        metrics = jax.device_get(metrics)
+        self._fresh_labels.clear()  # this step's `pending` saw every label
+        if self.recorder.host_history is not None:
+            self.recorder.record_host(
+                metrics["inst"], metrics["loss"], metrics["loss_valid"],
+                self.steps_run + 1,
+            )
+        self._last_metrics = metrics
+        self.steps_run += 1
+        self.generated_tokens += int(metrics["decoding"].sum())
+        return metrics
+
+    def run(self, max_steps: int = 1_000_000, on_step=None) -> dict:
+        """Drive until the queue is empty and every slot drained + evicted.
+
+        ``on_step(engine, metrics)`` runs after every tick — the hook for
+        drivers that deliver outcomes mid-flight or sample the ledger.
+        """
+        n = 0
+        while (self._queue or self._slot_of) and n < max_steps:
+            metrics = self.step()
+            if on_step is not None:
+                on_step(self, metrics)
+            self._evict_done()
+            n += 1
+        return self.stats()
+
+    def stats(self) -> dict:
+        return {
+            "admitted": self.admitted,
+            "evicted": self.evicted,
+            "steps": self.steps_run,
+            "generated_tokens": self.generated_tokens,
+            "recorded": int(jax.device_get(self._rstate.n_recorded)),
+            "missed_outcomes": self.missed_outcomes,
+            "queued": len(self._queue),
+            "in_flight": len(self._slot_of),
+        }
+
+    # -- ledger interchange ---------------------------------------------------
+
+    def ledger_state_dict(self) -> dict[str, np.ndarray]:
+        return self.recorder.state_dict(self._rstate)
+
+    def load_ledger_state_dict(self, sd: dict[str, np.ndarray]) -> None:
+        self._rstate = self.recorder.load_state_dict(self._rstate, dict(sd))
+        self._ledger_epoch += 1  # invalidate live-handle snapshots
+
+    @property
+    def ledger(self):
+        """Live RecycleFeed-compatible handle (lookup/state_dict)."""
+        if self.recorder.host_history is not None:
+            return self.recorder.host_history
+        return EngineLedgerHandle(self)
+
+
+def delayed_outcomes(outcomes, delay: int):
+    """Build a ``run(on_step=...)`` hook that delivers each instance's
+    labels ``delay`` engine steps after its admission — the standard way
+    to drive the late-outcome path (the serve CLI, the example and the
+    tests all use it). ``outcomes`` is a dict ``{instance_id: labels}``
+    or a sequence of ``(instance_id, labels)`` pairs; a repeated id (the
+    stream's pool wrapped) queues per-residency labels FIFO, matching the
+    engine's in-order admission of same-id requests. Delivered entries
+    are consumed.
+    """
+    from collections import deque
+
+    q: dict[int, deque] = {}
+    items = outcomes.items() if isinstance(outcomes, dict) else outcomes
+    for iid, labels in items:
+        q.setdefault(int(iid), deque()).append(labels)
+    due: dict[int, int] = {}
+    seen: set[tuple[int, int]] = set()
+
+    def on_step(engine: Engine, metrics) -> None:
+        del metrics
+        # keyed by (id, admission seq): exactly one delivery per RESIDENCY,
+        # even when a reused id evicts + readmits within one tick
+        for iid, seq in engine.in_flight_admissions():
+            if (iid, seq) not in seen:
+                seen.add((iid, seq))
+                if iid in q:
+                    due[iid] = engine.steps_run + delay
+        for iid, at in list(due.items()):
+            if engine.steps_run >= at:
+                engine.deliver_outcome(iid, q[iid].popleft())
+                if not q[iid]:
+                    del q[iid]
+                del due[iid]
+
+    return on_step
+
+
+class EngineLedgerHandle:
+    """Read-only live view of an engine's device ledger.
+
+    ``lookup(ids)`` answers from a host snapshot of the (global-layout)
+    table, refreshed whenever the engine has stepped since the last call —
+    the handle a ``data.RecycleFeed`` joins its batches against while the
+    engine keeps serving.
+    """
+
+    def __init__(self, engine: Engine):
+        self._engine = engine
+        self._snap_at: Optional[tuple] = None
+        self._hist: Optional[LossHistory] = None
+
+    def _refresh(self) -> LossHistory:
+        at = (
+            int(jax.device_get(self._engine._estate.step)),
+            self._engine._ledger_epoch,  # load_ledger_state_dict bumps it
+        )
+        if self._hist is None or at != self._snap_at:
+            h = LossHistory(self._engine.recorder.cfg)
+            h.load_state_dict(self._engine.ledger_state_dict())
+            self._hist, self._snap_at = h, at
+        return self._hist
+
+    def lookup(self, ids):
+        return self._refresh().lookup(ids)
+
+    def priority(self, ids, step):
+        return self._refresh().priority(ids, step)
+
+    def state_dict(self):
+        return self._engine.ledger_state_dict()

@@ -1,0 +1,298 @@
+"""Outcome recording for the serving engine: late labels -> ledger records.
+
+The paper's serving-side contract is "the fleet already paid for the
+forward; record a constant amount of per-instance information from it when
+the outcome arrives". At engine granularity that means three pieces of
+state per decode slot, all device-resident:
+
+* ``logits``   [S, G, V] — the retained forwards: every generated
+  position's logits, written by the fused decode step. Retention is the
+  price of *late* outcomes (a label that arrives after its position was
+  decoded can still be scored without a second forward — the whole point
+  is never paying an extra forward). The window is the slot residency;
+  outcomes that arrive after eviction are dropped and counted.
+* ``labels``   [S, G] — ground-truth next tokens, -1 = not yet known.
+  Delivered at admission (outcome known upfront) or any time later via
+  :meth:`OutcomeRecorder.deliver` (clicks / next events trickling in).
+* ``scored``   [S, G] — which positions have already been recorded, so a
+  position is recorded exactly once.
+
+Each fused engine step scores AT MOST ONE position per slot — the oldest
+labeled-but-unscored one. One-per-step keeps every record a separate
+ledger observation (the EMA compounds position by position, exactly like
+the host ``LossHistory`` fed the same sequence) instead of collapsing a
+batch of same-id records into last-write-wins; with labels delivered
+promptly it drains at exactly the generation rate.
+
+The ledger itself is placed by construction: a single device table
+(``DeviceLedger`` layout), or a mesh-sharded one via
+``sharded_ledger_ops`` — optionally *routed* (``route=True``), where each
+record is exchanged to the shard owning its global slot before the table
+visit, making the sharded table bit-identical to a single global table.
+The record runs inside the engine's jitted step: the loss never touches
+the host on its way to the ledger. A ``ledger="host"`` recorder computes
+losses on device but leaves the table to a numpy ``LossHistory`` the
+engine driver owns (the reference path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import device_ledger as dledger
+from repro.core.history import HistoryConfig, LossHistory
+from repro.distributed.ledger import ShardedLedgerOps, sharded_ledger_ops
+
+Array = jax.Array
+I32 = jnp.int32
+F32 = jnp.float32
+
+LEDGERS = ("host", "device")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RecorderState:
+    """Device state of the outcome recorder (a pytree; see module doc)."""
+
+    ledger: Optional[dledger.LedgerState]  # None for ledger="host"
+    logits: Array  # [S, G, V] retained forwards
+    labels: Array  # [S, G] i32, -1 = unknown
+    scored: Array  # [S, G] bool
+    n_recorded: Array  # [] i32: ledger records made (diagnostics)
+
+    def tree_flatten(self):
+        return (
+            self.ledger, self.logits, self.labels, self.scored,
+            self.n_recorded,
+        ), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class OutcomeRecorder:
+    """Owns ledger placement + the scoring/record pure functions.
+
+    ``ledger="device"`` with a mesh gives the sharded table (``route=True``
+    adds the cross-shard exchange); without a mesh, a single device table.
+    ``ledger="host"`` keeps a numpy ``LossHistory`` — device scoring, host
+    table (the engine records the step's (ids, losses, valid) into it).
+    """
+
+    def __init__(
+        self,
+        slots: int,
+        max_gen: int,
+        vocab: int,
+        cfg: HistoryConfig = HistoryConfig(),
+        *,
+        ledger: str = "device",
+        mesh: Optional[Mesh] = None,
+        dp_axes: Sequence[str] = ("data",),
+        route: bool = False,
+        logits_dtype=jnp.float32,
+    ):
+        assert ledger in LEDGERS, ledger
+        self.slots = slots
+        self.max_gen = max_gen
+        self.vocab = vocab
+        self.cfg = cfg
+        self.ledger = ledger
+        self.logits_dtype = jnp.dtype(logits_dtype)
+        self.ops: Optional[ShardedLedgerOps] = None
+        self.host_history: Optional[LossHistory] = None
+        if ledger == "device" and mesh is not None:
+            self.ops = sharded_ledger_ops(mesh, cfg, dp_axes, route=route)
+            if slots % self.ops.shards:
+                raise ValueError(
+                    f"engine slots {slots} not divisible by "
+                    f"{self.ops.shards} ledger shards"
+                )
+        elif ledger == "host":
+            self.host_history = LossHistory(cfg)
+
+    @property
+    def route(self) -> bool:
+        return self.ops is not None and self.ops.route
+
+    # -- state ---------------------------------------------------------------
+
+    def replicate(self, tree):
+        """Place a pytree mesh-replicated (sharded recorders only): every
+        array entering the engine's guarded fused step must already live
+        on the mesh, or the jit boundary would need an implicit transfer —
+        exactly what transfer_guard("disallow") rejects."""
+        if self.ops is None:
+            return tree
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        sh = NamedSharding(self.ops.mesh, PartitionSpec())
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+    def init_state(self) -> RecorderState:
+        s, g, v = self.slots, self.max_gen, self.vocab
+        if self.ledger == "host":
+            led = None
+        elif self.ops is not None:
+            led = self.ops.init()
+        else:
+            led = dledger.init_state(self.cfg)
+        return RecorderState(
+            ledger=led,
+            logits=self.replicate(jnp.zeros((s, g, v), self.logits_dtype)),
+            labels=self.replicate(jnp.full((s, g), -1, I32)),
+            scored=self.replicate(jnp.zeros((s, g), bool)),
+            n_recorded=self.replicate(jnp.zeros((), I32)),
+        )
+
+    # -- pure functions (traced inside the engine's jitted step) -------------
+
+    def clear_slot(
+        self,
+        state: RecorderState,
+        slot: Array,
+        logits0: Array,
+        labels_row: Array,
+    ) -> RecorderState:
+        """Reset a slot at admission; position 0's logits come from prefill."""
+        logits = state.logits.at[slot].set(
+            jnp.zeros((self.max_gen, self.vocab), self.logits_dtype)
+        )
+        logits = logits.at[slot, 0].set(logits0.astype(self.logits_dtype))
+        return RecorderState(
+            ledger=state.ledger,
+            logits=logits,
+            labels=state.labels.at[slot].set(labels_row.astype(I32)),
+            scored=state.scored.at[slot].set(
+                jnp.zeros((self.max_gen,), bool)
+            ),
+            n_recorded=state.n_recorded,
+        )
+
+    def observe(
+        self, state: RecorderState, gen_idx: Array, logits: Array,
+        writing: Array,
+    ) -> RecorderState:
+        """Retain this step's decode logits at [slot, gen_idx] where
+        ``writing``; masked rows scatter out of bounds and are dropped."""
+        bidx = jnp.arange(self.slots)
+        tgt = jnp.where(writing, gen_idx, self.max_gen)
+        return dataclasses.replace(
+            state,
+            logits=state.logits.at[bidx, tgt].set(
+                logits.astype(self.logits_dtype), mode="drop"
+            ),
+        )
+
+    def deliver(
+        self, state: RecorderState, slot: Array, labels_row: Array
+    ) -> RecorderState:
+        """Write late-arriving labels for a slot (-1 entries leave the
+        existing value — partial outcomes may arrive in pieces)."""
+        labels_row = labels_row.astype(I32)
+        cur = state.labels[slot]
+        return dataclasses.replace(
+            state,
+            labels=state.labels.at[slot].set(
+                jnp.where(labels_row >= 0, labels_row, cur)
+            ),
+        )
+
+    def score_one(
+        self,
+        state: RecorderState,
+        inst: Array,  # [S] i32, -1 = free slot
+        produced: Array,  # [S] i32: generated positions with logits retained
+        step: Array,  # scalar i32: ledger record step
+    ) -> tuple[RecorderState, dict[str, Array]]:
+        """Score the oldest labeled-but-unscored position of every slot.
+
+        Returns the updated state and {loss, valid, pending}: per-slot loss
+        of the scored position (``valid`` marks slots that recorded one) and
+        ``pending`` — whether labeled-unscored positions remain (the drain
+        signal eviction waits on).
+        """
+        s, g = self.slots, self.max_gen
+        bidx = jnp.arange(s)
+        giota = jnp.arange(g)[None, :]
+        cand = (
+            (state.labels >= 0)
+            & ~state.scored
+            & (giota < produced[:, None])
+        )  # [S, G]
+        has = cand.any(axis=1)
+        pos = jnp.argmax(cand, axis=1)  # first True (0 if none; masked out)
+        sel_logits = jnp.take_along_axis(
+            state.logits, pos[:, None, None], axis=1
+        )[:, 0].astype(F32)  # [S, V]
+        sel_label = jnp.take_along_axis(state.labels, pos[:, None], axis=1)[
+            :, 0
+        ]
+        lse = jax.nn.logsumexp(sel_logits, axis=-1)
+        picked = jnp.take_along_axis(
+            sel_logits, jnp.maximum(sel_label, 0)[:, None], axis=-1
+        )[:, 0]
+        loss = lse - picked
+        valid = has & (inst >= 0)
+        scored = state.scored.at[
+            bidx, jnp.where(valid, pos, g)
+        ].set(True, mode="drop")
+        ledger = state.ledger
+        if ledger is not None:
+            if self.ops is not None:
+                ledger = self.ops.record(ledger, inst, loss, step, valid)
+            else:
+                ledger = dledger.record(
+                    self.cfg, ledger, inst, loss, step, valid=valid
+                )
+        new = RecorderState(
+            ledger=ledger,
+            logits=state.logits,
+            labels=state.labels,
+            scored=scored,
+            n_recorded=state.n_recorded + valid.sum().astype(I32),
+        )
+        pending = (
+            (new.labels >= 0) & ~new.scored & (giota < produced[:, None])
+        ).any(axis=1)
+        return new, {"loss": loss, "valid": valid, "pending": pending}
+
+    # -- host interchange ----------------------------------------------------
+
+    def record_host(self, ids, losses, valid, step: int) -> None:
+        """The ledger="host" record half (driver-side, numpy)."""
+        assert self.host_history is not None
+        v = np.asarray(valid, bool)
+        if v.any():
+            self.host_history.record(
+                np.asarray(ids, np.int64)[v], np.asarray(losses)[v], step
+            )
+
+    def state_dict(self, state: RecorderState) -> dict[str, np.ndarray]:
+        if self.ledger == "host":
+            return self.host_history.state_dict()
+        if self.ops is not None:
+            return self.ops.state_dict(state.ledger)
+        return dledger.state_dict_of(state.ledger)
+
+    def load_state_dict(
+        self, state: RecorderState, sd: dict[str, np.ndarray]
+    ) -> RecorderState:
+        if self.ledger == "host":
+            self.host_history.load_state_dict(sd)
+            return state
+        if self.ops is not None:
+            return dataclasses.replace(
+                state, ledger=self.ops.load_state_dict(sd)
+            )
+        led = dledger.DeviceLedger(self.cfg)
+        led.load_state_dict(dict(sd))
+        return dataclasses.replace(state, ledger=led.state)

@@ -1,0 +1,75 @@
+"""Nightly benchmark table differ: keying, direction, fail-soft."""
+
+from benchmarks.diff_tables import diff, main, parse_tables
+
+HDR_SEL = "table,method,n,us_per_call,median_residual"
+HDR_SRV = "table,path,slots,gen,us_per_step,tok_per_s"
+
+
+def test_rows_keyed_by_config_columns_not_collapsed():
+    """Two sizes of one method are distinct rows — a regression in the
+    small size must not hide behind the large one."""
+    text = "\n".join([
+        HDR_SEL,
+        "selection,obftf,128,10.0,0.1",
+        "selection,obftf,4096,50.0,0.2",
+    ])
+    rows = parse_tables(text)
+    assert len(rows) == 2
+    assert ("selection", "obftf", "n=128") in rows
+    # the config column is key, not metric
+    assert "n" not in rows[("selection", "obftf", "n=128")]
+
+
+def test_regression_direction_and_detection():
+    prev = "\n".join([
+        HDR_SEL,
+        "selection,obftf,128,10.0,0.1",
+        "selection,obftf,4096,50.0,0.2",
+        HDR_SRV,
+        "serving,record[device],8,16,200,1000",
+    ])
+    curr = "\n".join([
+        HDR_SEL,
+        "selection,obftf,128,20.0,0.1",   # 2x slower: regression (up-bad)
+        "selection,obftf,4096,51.0,0.2",  # noise: fine
+        HDR_SRV,
+        "serving,record[device],8,16,210,500",  # tok_per_s halved (down-bad)
+    ])
+    warns, infos = diff(prev, curr, threshold=0.25)
+    assert any("n=128" in w and "us_per_call" in w for w in warns)
+    assert not any("n=4096" in w for w in warns)
+    assert any("tok_per_s" in w for w in warns)
+    assert not infos
+
+
+def test_up_good_metrics_and_ratio_key_axis():
+    """fig2-style rows: `ratio` is a config axis (key), `test_accuracy`
+    is up-good — a drop warns, a gain does not."""
+    hdr = "table,method,ratio,test_accuracy"
+    prev = "\n".join([hdr, "fig2,obftf,0.1,0.60", "fig2,obftf,0.25,0.80"])
+    curr = "\n".join([hdr, "fig2,obftf,0.1,0.20", "fig2,obftf,0.25,0.95"])
+    warns, _ = diff(prev, curr, threshold=0.25)
+    assert any("ratio=0.1" in w and "test_accuracy" in w for w in warns)
+    assert not any("ratio=0.25" in w for w in warns)  # improvement: quiet
+
+
+def test_missing_and_new_rows_reported():
+    prev = HDR_SEL + "\nselection,gone,128,1.0,0.1"
+    curr = HDR_SEL + "\nselection,new,128,1.0,0.1"
+    warns, infos = diff(prev, curr, threshold=0.25)
+    assert any("MISSING" in w and "gone" in w for w in warns)
+    assert any("new" in i for i in infos)
+
+
+def test_duplicate_keys_disambiguated_by_occurrence():
+    text = "\n".join([HDR_SEL, "selection,x,128,1.0,0.1",
+                      "selection,x,128,2.0,0.2"])
+    assert len(parse_tables(text)) == 2
+
+
+def test_fail_soft_without_previous_file(tmp_path, capsys):
+    curr = tmp_path / "curr.txt"
+    curr.write_text(HDR_SEL + "\nselection,obftf,128,10.0,0.1\n")
+    assert main([str(tmp_path / "absent.txt"), str(curr)]) == 0
+    assert "nothing to diff" in capsys.readouterr().out

@@ -250,6 +250,54 @@ def test_ledger_kernel_intra_batch_duplicates():
                                    rtol=1e-6)
 
 
+@pytest.mark.parametrize("cap,batch", [(1024, 300), (2048, 513), (256, 64)])
+def test_ledger_block_kernel_matches_ref(cap, batch):
+    """The two-pass block-parallel scatter (grid over table tiles) must be
+    exact vs the oracle — including write masks, collisions, staleness —
+    at batch sizes both above and below the auto-dispatch threshold."""
+    rng = np.random.default_rng(cap + batch)
+    state = _ledger_state(cap)
+    ids = jnp.asarray(rng.integers(0, 3 * cap, size=batch).astype(np.int32))
+    losses = jnp.asarray(rng.normal(2, 1, size=batch).astype(np.float32))
+    valid = jnp.asarray(rng.random(batch) > 0.25)
+    kw = dict(decay=0.8, unseen_priority=1e6, staleness_half_life=40.0,
+              valid=valid)
+    want = ops.ledger_record_priority(*state, ids, losses, jnp.int32(5),
+                                      impl="ref", **kw)
+    got = ops.ledger_record_priority(*state, ids, losses, jnp.int32(5),
+                                     impl="interpret", variant="block", **kw)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_ledger_variant_dispatch_by_batch():
+    """None = auto: small batches take the fori kernel, large the block
+    tiling; both agree with ref through a chained sequence."""
+    from repro.kernels.ledger import resolve_variant
+    from repro.kernels.ops import LEDGER_BLOCK_MIN_BATCH
+
+    rows = 1024 // 128
+    assert resolve_variant(None, 8, LEDGER_BLOCK_MIN_BATCH, rows) == "fori"
+    assert resolve_variant(
+        None, LEDGER_BLOCK_MIN_BATCH, LEDGER_BLOCK_MIN_BATCH, rows
+    ) == "block"
+    st_r = st_k = _ledger_state(1024)
+    kw = dict(decay=0.7, unseen_priority=1e6)
+    for step, b in enumerate((24, 300, 24)):  # crosses the threshold
+        ids, losses = _ledger_args(1024, b, seed=step, id_range=500)
+        out_r = ops.ledger_record_priority(*st_r, ids, losses,
+                                           jnp.int32(step), impl="ref", **kw)
+        out_k = ops.ledger_record_priority(*st_k, ids, losses,
+                                           jnp.int32(step),
+                                           impl="interpret", **kw)
+        st_r, st_k = out_r[:4], out_k[:4]
+        np.testing.assert_allclose(np.asarray(out_k[4]), np.asarray(out_r[4]),
+                                   rtol=1e-5)
+    for g, w in zip(st_k, st_r):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5)
+
+
 def test_ledger_kernel_matches_host_ledger():
     """Full-stack agreement: Pallas interpret kernel == numpy LossHistory."""
     from repro.core.history import HistoryConfig, LossHistory

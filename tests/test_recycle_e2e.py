@@ -56,7 +56,10 @@ def test_serve_then_recycle_train(tmp_path, ledger):
     # the saved state is the shared interchange format: both ledgers load it
     state = dict(np.load(ledger_npz))
     assert set(state) == {"ema", "count", "last_seen", "owner"}
-    assert int((state["owner"] >= 0).sum()) == 8  # one slot per served seq
+    # one slot per served request (the engine default streams 3 waves of
+    # --batch requests), every generated position recorded into it
+    assert int((state["owner"] >= 0).sum()) == 24
+    assert int(state["count"][state["owner"] >= 0].sum()) == 24 * 4
 
     # small instance pool => the stream repeats every 4 steps, so recycled
     # records actually hit and the run trains on data it has scored

@@ -1,0 +1,365 @@
+"""Continuous-batching engine: invariants, ledger parity, outcome paths.
+
+What the engine must guarantee (and an earlier serve.py did NOT):
+
+* stable, monotone, non-colliding instance ids — never a per-batch
+  ``arange`` that aliases distinct requests onto the same ledger slot;
+* EVERY generated position's loss recorded against its instance id (the
+  old driver scored only the prefill logits);
+* continuous batching is invisible to results: a request decoded through
+  a busy slotted batch produces the same tokens and the same recorded
+  losses as the same request served alone;
+* the fused decode+score+record step is transfer-free (the engine runs it
+  under ``jax.transfer_guard("disallow")`` by default — every test here
+  inherits that);
+* host-, device-, and routed-sharded-ledger placements agree bit-for-bit
+  on the same schedule.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.core.history import HistoryConfig, slot_for
+from repro.data import DataConfig, RecycleFeed, SyntheticLMStream
+from repro.launch.mesh import make_elastic_mesh
+from repro.models import model as Mdl
+from repro.models.params import materialize
+from repro.serving import Engine, OutcomeRecorder, delayed_outcomes
+
+CFG = configs.get_smoke("llama3-8b")
+LCFG = HistoryConfig(capacity=1 << 12, decay=0.8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return materialize(
+        Mdl.param_specs(CFG), jax.random.key(0), jnp.dtype(CFG.param_dtype)
+    )
+
+
+def make_engine(params, *, slots=4, max_prompt=16, max_gen=6, ledger="device",
+                route=False, **kw):
+    mesh = make_elastic_mesh() if route else None
+    rec = OutcomeRecorder(slots, max_gen, CFG.vocab_size, LCFG,
+                          ledger=ledger, mesh=mesh, route=route)
+    return Engine(CFG, params, rec, slots=slots, max_prompt=max_prompt,
+                  max_gen=max_gen, **kw)
+
+
+def random_requests(n, max_prompt=16, max_gen=6, seed=0):
+    rs = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n):
+        plen = int(rs.integers(3, max_prompt + 1))
+        gen = int(rs.integers(2, max_gen + 1))
+        reqs.append((
+            rs.integers(0, CFG.vocab_size, plen),
+            gen,
+            rs.integers(0, CFG.vocab_size, gen),
+        ))
+    return reqs
+
+
+def drive(engine, reqs, delay=0, label_frac=1.0, seed=0):
+    """Submit, run, deliver labels `delay` steps after admission for a
+    `label_frac` share of requests; returns [(iid, labels|None), ...]."""
+    rs = np.random.default_rng(seed + 1)
+    submitted = []
+    for prompt, gen, labels in reqs:
+        labeled = rs.random() < label_frac
+        iid = engine.submit(
+            prompt, max_new=gen,
+            labels=labels if (labeled and delay == 0) else None,
+            expect_labels=labeled and delay > 0,
+        )
+        submitted.append((iid, labels if labeled else None))
+    pending = {
+        iid: lab for iid, lab in submitted if lab is not None and delay > 0
+    }
+    deliver = delayed_outcomes(pending, delay)
+
+    def on_step(eng, metrics):
+        deliver(eng, metrics)
+        assert len(eng.in_flight_ids()) <= eng.slots  # never over-committed
+
+    engine.run(max_steps=2000, on_step=on_step if delay else None)
+    return submitted
+
+
+# ---------------------------------------------------------------------------
+# invariants under a randomized schedule
+# ---------------------------------------------------------------------------
+
+
+def test_engine_admission_eviction_invariants(params):
+    reqs = random_requests(11, seed=3)
+    eng = make_engine(params, slots=4)
+    submitted = drive(eng, reqs)
+    stats = eng.stats()
+    # every request admitted exactly once, every slot freed, queue drained
+    assert stats["admitted"] == stats["evicted"] == len(reqs)
+    assert stats["queued"] == stats["in_flight"] == 0
+    # ids are engine-assigned, monotone, unique
+    ids = [iid for iid, _ in submitted]
+    assert ids == sorted(set(ids))
+    # each request generated exactly max_new tokens
+    for (prompt, gen, _), (iid, _) in zip(reqs, submitted):
+        assert eng.finished[iid].shape == (gen,)
+    # decode tokens = sum(gen - 1): position 0 comes from prefill
+    assert stats["generated_tokens"] == sum(g - 1 for _, g, _ in reqs)
+    # every labeled position recorded exactly once
+    assert stats["recorded"] == sum(g for _, g, _ in reqs)
+    assert stats["missed_outcomes"] == 0
+
+
+def test_engine_partial_labels_and_late_delivery(params):
+    reqs = random_requests(9, seed=5)
+    eng_now = make_engine(params, slots=3)
+    sub_now = drive(eng_now, reqs, delay=0, label_frac=0.6, seed=7)
+    labeled = sum(1 for _, lab in sub_now if lab is not None)
+    assert eng_now.stats()["recorded"] == sum(
+        g for (_, g, _), (_, lab) in zip(reqs, sub_now) if lab is not None
+    )
+    # same schedule, labels delivered 3 steps late: identical ledger
+    eng_late = make_engine(params, slots=3)
+    drive(eng_late, reqs, delay=3, label_frac=0.6, seed=7)
+    assert eng_late.stats()["recorded"] == eng_now.stats()["recorded"]
+    sd_now, sd_late = eng_now.ledger_state_dict(), eng_late.ledger_state_dict()
+    np.testing.assert_array_equal(sd_now["owner"], sd_late["owner"])
+    np.testing.assert_array_equal(sd_now["count"], sd_late["count"])
+    np.testing.assert_allclose(sd_now["ema"], sd_late["ema"], rtol=1e-6)
+    assert labeled > 0
+
+
+def test_duplicate_in_flight_id_defers_admission(params):
+    """Two queued requests under one instance id: the second must wait for
+    the first's slot to evict — two live slots under one id would corrupt
+    the slot map and leak a slot forever."""
+    eng = make_engine(params, slots=4)
+    rs = np.random.default_rng(31)
+    for _ in range(2):
+        eng.submit(rs.integers(0, CFG.vocab_size, 6), max_new=3,
+                   labels=rs.integers(0, CFG.vocab_size, 3), instance_id=77)
+
+    def on_step(e, m):
+        assert list(e.in_flight_ids()).count(77) <= 1
+
+    eng.run(max_steps=300, on_step=on_step)
+    s = eng.stats()
+    assert s["admitted"] == s["evicted"] == 2, s
+    assert s["in_flight"] == 0 and s["queued"] == 0, s
+    slot = slot_for(np.asarray([77]), LCFG.capacity)[0]
+    sd = eng.ledger_state_dict()
+    # both servings recorded under the id: 3 + 3 observations
+    assert sd["owner"][slot] == 77 and sd["count"][slot] == 6
+
+
+def test_duplicate_id_delayed_outcomes_fifo(params):
+    """Pool wrap under --outcome-delay: the same id served twice with
+    different outcomes — each residency must get its own labels (FIFO),
+    and both must drain (neither residency wedges awaiting labels)."""
+    rs = np.random.default_rng(37)
+    prompts = [rs.integers(0, CFG.vocab_size, 6) for _ in range(2)]
+    labels = [rs.integers(0, CFG.vocab_size, 3) for _ in range(2)]
+    eng = make_engine(params, slots=2)
+    outcomes = []
+    for p, lab in zip(prompts, labels):
+        iid = eng.submit(p, max_new=3, expect_labels=True, instance_id=55)
+        outcomes.append((iid, lab))
+    eng.run(max_steps=300, on_step=delayed_outcomes(outcomes, delay=2))
+    s = eng.stats()
+    assert s["evicted"] == 2 and s["in_flight"] == 0, s
+    assert s["recorded"] == 6, s
+    slot = slot_for(np.asarray([55]), LCFG.capacity)[0]
+    assert eng.ledger_state_dict()["count"][slot] == 6
+
+
+def test_deliver_before_admission_attaches_to_queued_request(params):
+    """Outcomes may land while the request is still queued: they must
+    attach to it (delivered at admission), not be dropped as missed —
+    dropping would wedge an expect_labels slot forever."""
+    rs = np.random.default_rng(41)
+    eng = make_engine(params, slots=2)
+    iid = eng.submit(rs.integers(0, CFG.vocab_size, 6), max_new=3,
+                     expect_labels=True)
+    labels = rs.integers(0, CFG.vocab_size, 3)
+    assert eng.deliver_outcome(iid, labels)  # before any step ran
+    eng.run(max_steps=100)
+    s = eng.stats()
+    assert s["evicted"] == 1 and s["recorded"] == 3, s
+    assert s["missed_outcomes"] == 0
+
+
+def test_outcome_after_eviction_is_counted_missed(params):
+    eng = make_engine(params, slots=2)
+    (prompt, gen, labels) = random_requests(1, seed=9)[0]
+    iid = eng.submit(prompt, max_new=gen)  # no labels, none expected
+    eng.run(max_steps=100)
+    assert eng.stats()["evicted"] == 1 and eng.stats()["recorded"] == 0
+    assert not eng.deliver_outcome(iid, labels)  # slot long gone
+    assert eng.stats()["missed_outcomes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# regression: per-position recording with stable ids (old serve.py bugs)
+# ---------------------------------------------------------------------------
+
+
+def test_every_position_recorded_under_stable_ids(params):
+    """The one-shot driver scored only logits_seq[0] and re-used
+    ids=arange(batch) across runs. The engine must record max_new losses
+    per request under ids that never collide across waves."""
+    reqs = random_requests(8, seed=11)
+    eng = make_engine(params, slots=2)  # 4 waves through 2 slots
+    submitted = drive(eng, reqs)
+    sd = eng.ledger_state_dict()
+    for (prompt, gen, _), (iid, _) in zip(reqs, submitted):
+        slot = slot_for(np.asarray([iid]), LCFG.capacity)[0]
+        assert sd["owner"][slot] == iid
+        # count == generated positions: every position was an observation
+        assert sd["count"][slot] == gen, (iid, gen, sd["count"][slot])
+
+
+def test_engine_matches_solo_serving(params):
+    """Continuous batching must be invisible: a request served through a
+    busy 4-slot engine yields the same tokens and same recorded EMA as the
+    same request served alone (slots=1)."""
+    reqs = random_requests(6, max_prompt=12, max_gen=5, seed=13)
+    busy = make_engine(params, slots=4, max_prompt=12, max_gen=5)
+    sub_busy = drive(busy, reqs)
+    solo = make_engine(params, slots=1, max_prompt=12, max_gen=5)
+    sub_solo = drive(solo, reqs)
+    sd_b, sd_s = busy.ledger_state_dict(), solo.ledger_state_dict()
+    for (iid_b, _), (iid_s, _) in zip(sub_busy, sub_solo):
+        np.testing.assert_array_equal(
+            busy.finished[iid_b], solo.finished[iid_s]
+        )
+        sb = slot_for(np.asarray([iid_b]), LCFG.capacity)[0]
+        ss = slot_for(np.asarray([iid_s]), LCFG.capacity)[0]
+        np.testing.assert_allclose(
+            sd_b["ema"][sb], sd_s["ema"][ss], rtol=1e-5
+        )
+
+
+def test_recorded_ema_matches_hand_rolled_decode(params):
+    """Oracle: prefill + greedy decode by hand, fold per-position CE into
+    an EMA — the ledger slot must hold exactly that (all positions, in
+    order)."""
+    rs = np.random.default_rng(17)
+    prompt = rs.integers(0, CFG.vocab_size, 9)
+    labels = rs.integers(0, CFG.vocab_size, 5)
+    eng = make_engine(params, slots=2, max_prompt=12, max_gen=5)
+    iid = eng.submit(prompt, max_new=5, labels=labels)
+    eng.run(max_steps=50)
+
+    logits, cache = Mdl.prefill(
+        params, CFG, jnp.asarray(prompt[None].astype(np.int32)), max_seq=17
+    )
+    want = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for g in range(5):
+        lf = np.asarray(logits, np.float32)[0]
+        m = lf.max()
+        want.append(m + np.log(np.exp(lf - m).sum()) - lf[labels[g]])
+        if g < 4:
+            logits, cache = Mdl.decode_step(
+                params, CFG, cache, tok, jnp.asarray(9 + g, jnp.int32)
+            )
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    ema = want[0]
+    for l in want[1:]:
+        ema = LCFG.decay * ema + (1 - LCFG.decay) * l
+    sd = eng.ledger_state_dict()
+    slot = slot_for(np.asarray([iid]), LCFG.capacity)[0]
+    assert sd["owner"][slot] == iid and sd["count"][slot] == 5
+    np.testing.assert_allclose(sd["ema"][slot], ema, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ledger placements agree
+# ---------------------------------------------------------------------------
+
+
+def test_host_device_routed_ledgers_agree(params):
+    """One schedule, three placements. The two DEVICE placements (single
+    table, routed sharded table — 1-shard mesh here; the multi-shard case
+    is tests/test_serving_sharded.py) must agree bit-for-bit: the routed
+    layout IS the global layout. The host numpy table matches to f32
+    rounding (numpy and XLA may fuse the EMA multiply-add differently)."""
+    reqs = random_requests(7, seed=19)
+    sds = []
+    for kw in (dict(ledger="host"), dict(ledger="device"),
+               dict(ledger="device", route=True)):
+        eng = make_engine(params, slots=4, **kw)
+        drive(eng, reqs)
+        sds.append(eng.ledger_state_dict())
+    host, dev, routed = sds
+    for k in ("ema", "count", "last_seen", "owner"):
+        np.testing.assert_array_equal(dev[k], routed[k], err_msg=k)
+        np.testing.assert_allclose(
+            np.asarray(host[k], np.float64), np.asarray(dev[k], np.float64),
+            rtol=1e-6, err_msg=k,
+        )
+
+
+def test_ledger_interchange_and_recycle_feed(params):
+    """serve -> .npz -> warm engine, and the LIVE engine handle joining a
+    RecycleFeed batch (ledger="engine") with real hit rates."""
+    reqs = random_requests(6, seed=23)
+    eng = make_engine(params, slots=3)
+    submitted = drive(eng, reqs)
+    sd = eng.ledger_state_dict()
+
+    eng2 = make_engine(params, slots=3)
+    handle2 = eng2.ledger
+    _, seen_cold = handle2.lookup(np.asarray([0], np.int64))
+    assert not seen_cold.any()  # snapshot of the empty table
+    eng2.load_ledger_state_dict(sd)
+    ids = np.asarray([iid for iid, _ in submitted], np.int64)
+    # the SAME handle must see the loaded table (epoch bump invalidates
+    # its snapshot even though the engine hasn't stepped)
+    ema2, seen2 = handle2.lookup(ids)
+    ema1, seen1 = eng.ledger.lookup(ids)
+    np.testing.assert_array_equal(np.asarray(seen1), np.asarray(seen2))
+    np.testing.assert_allclose(np.asarray(ema1), np.asarray(ema2), rtol=1e-6)
+
+    # live handle -> RecycleFeed: ids the engine served get its EMA, the
+    # rest fall back to cold_loss
+    stream = SyntheticLMStream(DataConfig(4, 8, CFG.vocab_size,
+                                          instance_pool=16))
+    feed = RecycleFeed(stream, history=eng.ledger, ledger="engine",
+                       cold_loss=123.0)
+    batch = feed.batch(1)  # ids 4..7: engine served 0..5 -> 4,5 hit, 6,7 cold
+    served = set(int(i) for i, _ in submitted)
+    for row, iid in enumerate(batch["instance_id"]):
+        if int(iid) in served:
+            assert batch["recorded_loss"][row] != 123.0
+        else:
+            assert batch["recorded_loss"][row] == 123.0
+    assert 0.0 < batch["ledger_hit_rate"] <= 1.0
+
+
+def test_exact_length_families_reject_padding(params):
+    """Recurrent/MoE/windowed families must refuse prompt padding (pads
+    would perturb real positions) but still serve via exact-length
+    prefill."""
+    cfg = configs.get_smoke("mamba2-370m")
+    p = materialize(Mdl.param_specs(cfg), jax.random.key(1),
+                    jnp.dtype(cfg.param_dtype))
+    rec = OutcomeRecorder(2, 4, cfg.vocab_size, LCFG, ledger="device")
+    with pytest.raises(ValueError, match="right-pad"):
+        Engine(cfg, p, rec, slots=2, max_prompt=8, max_gen=4,
+               prompt_buckets=(8,))
+    rec2 = OutcomeRecorder(2, 4, cfg.vocab_size, LCFG, ledger="device")
+    eng = Engine(cfg, p, rec2, slots=2, max_prompt=8, max_gen=4)
+    assert eng.prompt_buckets is None
+    rs = np.random.default_rng(29)
+    for plen in (5, 7):
+        eng.submit(rs.integers(0, cfg.vocab_size, plen), max_new=3,
+                   labels=rs.integers(0, cfg.vocab_size, 3))
+    eng.run(max_steps=100)
+    assert eng.stats()["evicted"] == 2
+    assert eng.stats()["recorded"] == 6
