@@ -23,13 +23,16 @@ import argparse
 import sys
 
 # metric-column name fragments that mean "bigger is better"
-_UP_GOOD = ("tok_per_s", "ratio", "hit", "accuracy")
+_UP_GOOD = ("tok_per_s", "ratio", "hit", "accuracy", "max_slots")
 # numeric columns that identify WHICH benchmark a row is (part of the row
 # key, matched by exact column name), as opposed to a measured quantity —
 # "ratio" is fig1/fig2/table3's selection-ratio config axis (the metric
-# named traffic_ratio_vs_naive is NOT an exact match and stays a metric)
+# named traffic_ratio_vs_naive is NOT an exact match and stays a metric);
+# "vocab"/"topk" key the serving retained-memory rows (bytes_per_slot and
+# max_slots_per_gib are the metrics there: a bytes_per_slot increase or a
+# max_slots_per_gib drop flags a retained-outcome memory regression)
 _KEY_COLS = ("n", "capacity", "batch", "slots", "gen", "size", "steps",
-             "seq", "shape", "ratio")
+             "seq", "shape", "ratio", "vocab", "topk")
 
 
 def parse_tables(text: str) -> dict[tuple, dict[str, float]]:

@@ -168,7 +168,7 @@ def main_ledger(fast: bool = False) -> list[str]:
 
 
 def _serving_run(cfg, params, slots, gen, prompt, waves, ledger, route,
-                 with_labels):
+                 with_labels, retention="full", topk=64):
     """Stream `waves` request waves through a fresh engine; returns
     (us_per_step, tok_per_s) measured after a one-wave warmup (compiles
     amortize — the nightly row trends the steady state)."""
@@ -180,7 +180,8 @@ def _serving_run(cfg, params, slots, gen, prompt, waves, ledger, route,
 
     mesh = make_elastic_mesh() if route else None
     rec = OutcomeRecorder(slots, gen, cfg.vocab_size, HistoryConfig(),
-                          ledger=ledger, mesh=mesh, route=route)
+                          ledger=ledger, mesh=mesh, route=route,
+                          retention=retention, topk=topk)
     eng = Engine(cfg, params, rec, slots=slots, max_prompt=prompt,
                  max_gen=gen)
     stream = SyntheticLMStream(
@@ -211,6 +212,37 @@ def _serving_run(cfg, params, slots, gen, prompt, waves, ledger, route,
     return dt / max(steps, 1) * 1e6, toks / max(dt, 1e-9)
 
 
+def _retained_memory_rows(gen: int) -> list[str]:
+    """Retained-outcome HBM cost at PRODUCTION vocab (not the smoke
+    model): bytes per slot and how many concurrent slots one GiB of
+    retained-outcome budget holds. Asserts the >= 50x compression the
+    topk mode exists for (V=152k, k=64 — the qwen3-14b deployment
+    point)."""
+    from repro import configs
+    from repro.core.history import HistoryConfig
+    from repro.serving import OutcomeRecorder
+
+    vocab = configs.get("qwen3-14b").vocab_size  # 152k-class vocab
+    k = 64
+    out = ["table,path,vocab,topk,gen,bytes_per_slot,max_slots_per_gib"]
+    for name, retention, kk in (("retained[full]", "full", 0),
+                                ("retained[topk]", "topk", k)):
+        rec = OutcomeRecorder(1, gen, vocab, HistoryConfig(),
+                              ledger="host", retention=retention,
+                              topk=max(kk, 1))
+        bps = rec.retained_bytes_per_slot()
+        if retention == "full":
+            full_bps = bps
+        out.append(
+            f"serving,{name},{vocab},{kk},{gen},{bps},{(1 << 30) // bps}"
+        )
+    assert full_bps >= 50 * bps, (
+        f"topk retention must compress >= 50x at V={vocab}/k={k}: "
+        f"full={full_bps} topk={bps}"
+    )
+    return out
+
+
 def main_serving(fast: bool = False) -> list[str]:
     """Continuous-batching engine cost: decode-only vs fused recording.
 
@@ -218,7 +250,10 @@ def main_serving(fast: bool = False) -> list[str]:
     masked) is the engine's floor; the record rows price the fused
     score+ledger-write against it — `device` one table, `routed` the
     sharded table with the cross-shard exchange (identity off a multi-chip
-    mesh, so that row prices the routing machinery, not a network).
+    mesh, so that row prices the routing machinery, not a network), and
+    `topk` the compressed retained-outcome summary (full-vs-topk record
+    overhead). The retained[*] rows carry the memory side: bytes/slot and
+    max slots at a fixed HBM budget, at production vocab.
     """
     import jax.numpy as jnp
 
@@ -233,16 +268,17 @@ def main_serving(fast: bool = False) -> list[str]:
     slots, gen, prompt = (4, 8, 16) if fast else (8, 16, 32)
     waves = 2 if fast else 3
     rows = [
-        ("decode-only", "device", False, False),
-        ("record[device]", "device", False, True),
-        ("record[routed]", "device", True, True),
+        ("decode-only", "device", False, False, "full"),
+        ("record[device]", "device", False, True, "full"),
+        ("record[routed]", "device", True, True, "full"),
+        ("record[topk]", "device", False, True, "topk"),
     ]
     out = ["table,path,slots,gen,us_per_step,tok_per_s"]
-    for name, ledger, route, lab in rows:
+    for name, ledger, route, lab, retention in rows:
         us, tps = _serving_run(cfg, params, slots, gen, prompt, waves,
-                               ledger, route, lab)
+                               ledger, route, lab, retention=retention)
         out.append(f"serving,{name},{slots},{gen},{us:.0f},{tps:.1f}")
-    return out
+    return out + _retained_memory_rows(gen)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from repro.kernels import decode_attn as _da
 from repro.kernels import ledger as _ledger
 from repro.kernels import ref as _ref
 from repro.kernels import ssd as _ssd
+from repro.kernels import topk_lse as _topk
 from repro.kernels import xent as _xent
 
 _DEFAULT_IMPL = "ref"
@@ -81,6 +82,23 @@ def _xent_bwd(impl, res, g):
 
 
 xent_loss.defvjp(_xent_fwd, _xent_bwd)
+
+
+# ---------------------------------------------------------------------------
+# top-k + lse retained-outcome summary (inference only — no vjp needed)
+# ---------------------------------------------------------------------------
+
+
+def topk_lse(
+    logits: jax.Array, k: int, impl: Optional[str] = None
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Compress logits [T,V] into the retained-outcome summary:
+    (top-k values [T,k] f32 descending, top-k indices [T,k] i32,
+    exact lse [T] f32). One streaming pass on the Pallas path."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.topk_lse_ref(logits, k)
+    return _topk.topk_lse(logits, k, interpret=(impl == "interpret"))
 
 
 # ---------------------------------------------------------------------------

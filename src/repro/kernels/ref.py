@@ -12,11 +12,28 @@ F32 = jnp.float32
 
 
 def xent_ref(logits: Array, labels: Array) -> tuple[Array, Array]:
-    """Per-token CE. logits [T,V], labels [T] -> (loss [T], lse [T]), f32."""
+    """Per-token CE. logits [T,V], labels [T] -> (loss [T], lse [T]), f32.
+
+    Negative labels (the recorder's -1 "unknown" sentinel) pick no
+    logit: loss = lse, matching the kernel's no-hit path (where a -1
+    column offset never equals the block iota) instead of numpy-wrapping
+    to the last vocab column.
+    """
     logits = logits.astype(F32)
     lse = jax.nn.logsumexp(logits, axis=-1)
-    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
-    return lse - picked, lse
+    picked = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[:, None], axis=-1
+    )[:, 0]
+    return lse - jnp.where(labels >= 0, picked, 0.0), lse
+
+
+def topk_lse_ref(logits: Array, k: int) -> tuple[Array, Array, Array]:
+    """Retained-outcome summary: logits [T,V] -> (vals [T,k] f32
+    descending, idx [T,k] i32, lse [T] f32). Ties resolve to the lowest
+    vocab index (``jax.lax.top_k`` semantics)."""
+    logits = logits.astype(F32)
+    vals, idx = jax.lax.top_k(logits, k)
+    return vals, idx.astype(jnp.int32), jax.nn.logsumexp(logits, axis=-1)
 
 
 def xent_grad_ref(logits: Array, labels: Array, lse: Array, g: Array) -> Array:

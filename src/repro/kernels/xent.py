@@ -98,7 +98,9 @@ def xent_fwd(
     bt = min(bt, max(8, -(-t // 8) * 8))
     bv = min(bv, max(128, -(-v // 128) * 128))
     lp = _pad_to(_pad_to(logits, bt, 0, 0.0), bv, 1, NEG_INF)
-    lab = _pad_to(labels.astype(jnp.int32), bt, 0, 0)[:, None]  # [Tp, 1]
+    # pad labels with -1 (no hit), same as the backward: a 0 fill would
+    # alias pad rows onto vocab column 0
+    lab = _pad_to(labels.astype(jnp.int32), bt, 0, -1)[:, None]  # [Tp, 1]
     tp, vp = lp.shape
     grid = (tp // bt, vp // bv)
     loss, lse = pl.pallas_call(

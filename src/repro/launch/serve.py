@@ -54,6 +54,8 @@ def build_engine(args, cfg, params):
         ledger=args.ledger,
         mesh=mesh,
         route=args.ledger_route,
+        retention=args.retain,
+        topk=args.topk,
     )
     return Engine(
         cfg,
@@ -127,6 +129,15 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--instance-pool", type=int, default=1 << 20,
                     help="distinct stream instance ids before reuse")
+    ap.add_argument("--retain", default="full", choices=("full", "topk"),
+                    help="retained-outcome layout: the dense [slots,gen,V] "
+                         "logits buffer (exact oracle) or the compressed "
+                         "(top-k values/indices, exact lse) summary — "
+                         "constant size in V; late labels score exactly on "
+                         "a top-k hit, at the lse-min(topk) tail floor on "
+                         "a miss")
+    ap.add_argument("--topk", type=int, default=64,
+                    help="retained top-k width under --retain topk")
     ap.add_argument("--ledger", default="host", choices=("host", "device"),
                     help="record outcomes into the host numpy ledger or the "
                          "device-resident one (no host transfer per record)")
@@ -162,10 +173,14 @@ def main(argv=None) -> int:
 
     waves, submitted = submit_stream(engine, args, cfg)
     shards = engine.recorder.ops.shards if engine.recorder.ops else 1
+    bps = engine.recorder.retained_bytes_per_slot()
     print(
         f"arch={cfg.name} slots={args.batch} requests={args.requests} "
         f"({waves} waves) gen<= {args.gen} ledger={args.ledger}"
         + (f"[routed x{shards}]" if args.ledger_route else "")
+        + f" retain={args.retain}"
+        + (f"[k={args.topk}]" if args.retain == "topk" else "")
+        + f" ({bps / 1e6:.3f} MB retained/slot)"
     )
 
     on_step = (
@@ -190,6 +205,11 @@ def main(argv=None) -> int:
         f"mean ema={float(np.asarray(ema)[np.asarray(seen)].mean() if np.asarray(seen).any() else 0):.3f}; "
         f"ledger hit rate={float(np.asarray(seen).mean()):.2f}"
     )
+    if args.retain == "topk":
+        print(
+            f"top-k tail-floor records: {stats['topk_misses']} of "
+            f"{stats['recorded']} (rest scored exactly)"
+        )
     if args.ledger_out:
         sd = engine.ledger_state_dict()
         np.savez(args.ledger_out, **sd)
@@ -207,6 +227,9 @@ def main(argv=None) -> int:
             shards=shards,
             hit_rate=float(np.asarray(seen).mean()),
             outcome_delay=args.outcome_delay,
+            retention=args.retain,
+            topk=args.topk,
+            retained_bytes_per_slot=bps,
         )
         with open(args.json_out, "w") as f:
             json.dump(summary, f)

@@ -18,6 +18,8 @@ from repro.serving.engine import (  # noqa: F401
     pad_safe,
 )
 from repro.serving.recorder import (  # noqa: F401
+    RETENTIONS,
     OutcomeRecorder,
     RecorderState,
+    topk_score,
 )

@@ -175,6 +175,7 @@ class Engine:
         self._id_stride = id_stride
         self._queue: list[Request] = []
         self._slot_of: dict[int, int] = {}
+        self._max_new_of: dict[int, int] = {}  # resident slots only
         self._free = list(range(slots))[::-1]  # pop() -> lowest slot first
         self._await_labels: dict[int, bool] = {}
         self._admission_seq: dict[int, int] = {}
@@ -303,6 +304,7 @@ class Engine:
             "pending": info["pending"],
             "loss": info["loss"],
             "loss_valid": info["valid"],
+            "topk_miss": info["miss"],
             "n_recorded": rstate.n_recorded,
         }
         return new_es, rstate, metrics
@@ -329,6 +331,14 @@ class Engine:
         if instance_id is None:
             instance_id = self._id_next
             self._id_next += self._id_stride
+        else:
+            iid = int(instance_id)
+            on_lane = (iid - self._id_next) % self._id_stride == 0
+            if on_lane and iid >= self._id_next:
+                # an explicit id on this engine's auto lane: advance past
+                # it, or a later auto-assigned id would collide and merge
+                # two requests' records under one ledger id
+                self._id_next = iid + self._id_stride
         if expect_labels is None:
             expect_labels = False
         self._queue.append(
@@ -341,7 +351,10 @@ class Engine:
     def deliver_outcome(self, instance_id: int, labels: np.ndarray) -> bool:
         """Late labels for a (possibly still decoding) request. A request
         still waiting in the queue gets them attached for admission; after
-        its slot left, they are dropped and counted missed."""
+        its slot left, they are dropped and counted missed. Labels beyond
+        the request's ``max_new`` can never be scored (no position was
+        decoded for them) — they are dropped and counted in
+        ``missed_outcomes``, same as at admission."""
         slot = self._slot_of.get(int(instance_id))
         if slot is None:
             for req in self._queue:  # not yet admitted: attach to request
@@ -351,11 +364,20 @@ class Engine:
                     return True
             self.missed_outcomes += 1
             return False
+        limit = self._max_new_of.get(int(instance_id), self.max_gen)
         row = np.full((self.recorder.max_gen,), -1, np.int64)
         labels = np.asarray(labels, np.int64).reshape(-1)
-        row[: min(labels.size, row.size)] = labels[: row.size]
+        use = min(labels.size, limit)
+        row[:use] = labels[:use]
+        self.missed_outcomes += int((labels[limit:] >= 0).sum())
+        # route the row onto the recorder's placement (mesh-replicated on
+        # sharded recorders) BEFORE the jit: a default-device array would
+        # need an implicit transfer at the _deliver boundary, and the
+        # updated labels could come back off-mesh and trip the next
+        # guarded fused step
         self._rstate = self._deliver(
-            self._rstate, slot, jnp.asarray(row.astype(np.int32))
+            self._rstate, slot,
+            self.recorder.replicate(jnp.asarray(row.astype(np.int32))),
         )
         self._await_labels[int(instance_id)] = False
         self._fresh_labels.add(slot)
@@ -383,12 +405,19 @@ class Engine:
             row[: min(req.labels.size, req.max_new)] = req.labels[
                 : req.max_new
             ]
+            # labels past max_new have no decoded position to score
+            # against — drop and count them (deliver_outcome applies the
+            # same max_new cut to labels arriving mid-residency)
+            self.missed_outcomes += int(
+                (req.labels[req.max_new:] >= 0).sum()
+            )
         self._estate, self._rstate = self._insert(
             self._estate, self._rstate, new_cache, logits0,
             slot, req.instance_id, req.prompt.size, req.max_new,
             jnp.asarray(row.astype(np.int32)),
         )
         self._slot_of[req.instance_id] = slot
+        self._max_new_of[req.instance_id] = req.max_new
         self._await_labels[req.instance_id] = req.expect_labels
         self.admitted += 1
         self._admission_seq[req.instance_id] = self.admitted
@@ -408,6 +437,7 @@ class Engine:
                 toks = jax.device_get(self._estate.out_toks[slot, :gen])
                 self.finished[inst] = np.asarray(toks)
                 del self._slot_of[inst]
+                self._max_new_of.pop(inst, None)
                 self._await_labels.pop(inst, None)
                 self._admission_seq.pop(inst, None)
                 self._free.append(slot)
@@ -485,6 +515,7 @@ class Engine:
             "steps": self.steps_run,
             "generated_tokens": self.generated_tokens,
             "recorded": int(jax.device_get(self._rstate.n_recorded)),
+            "topk_misses": int(jax.device_get(self._rstate.n_miss)),
             "missed_outcomes": self.missed_outcomes,
             "queued": len(self._queue),
             "in_flight": len(self._slot_of),

@@ -2,20 +2,33 @@
 
 The paper's serving-side contract is "the fleet already paid for the
 forward; record a constant amount of per-instance information from it when
-the outcome arrives". At engine granularity that means three pieces of
-state per decode slot, all device-resident:
+the outcome arrives". At engine granularity that means per-slot state, all
+device-resident, in one of two retention modes:
 
-* ``logits``   [S, G, V] — the retained forwards: every generated
-  position's logits, written by the fused decode step. Retention is the
-  price of *late* outcomes (a label that arrives after its position was
-  decoded can still be scored without a second forward — the whole point
-  is never paying an extra forward). The window is the slot residency;
-  outcomes that arrive after eviction are dropped and counted.
-* ``labels``   [S, G] — ground-truth next tokens, -1 = not yet known.
-  Delivered at admission (outcome known upfront) or any time later via
-  :meth:`OutcomeRecorder.deliver` (clicks / next events trickling in).
-* ``scored``   [S, G] — which positions have already been recorded, so a
-  position is recorded exactly once.
+* ``retention="topk"`` (the production mode) — per generated position keep
+  ``(top-k values, top-k indices, exact lse)``: ``topk_vals`` [S, G, K]
+  f32, ``topk_idx`` [S, G, K] i32, ``lse`` [S, G] f32, computed inside the
+  fused decode step by the ``kernels.topk_lse`` streaming summary.
+  Constant size in V: at V=152k / K=64 this is ~1100x smaller than the
+  dense row (see :meth:`OutcomeRecorder.retained_bytes_per_slot`), which
+  is what lets a fixed HBM budget hold 50x+ more concurrent slots. A late
+  label is scored EXACTLY when it hits the top-k set (its logit was
+  retained verbatim, and the lse is exact by construction); on a miss the
+  loss is clamped to the tail floor ``lse - min(topk)`` — a certain lower
+  bound, since the missed logit is <= every retained one. Recorded losses
+  therefore never exceed the exact loss, and the ledger EMA drifts below
+  the exact-scoring EMA by at most the largest per-position gap (EMA
+  weights sum to <= 1). Misses are counted (``n_miss``).
+* ``retention="full"`` (the oracle) — ``logits`` [S, G, V], the dense
+  retained forwards. Exact on every label; the acceptance tests score the
+  same schedule through both modes and bound the drift.
+
+Common to both: ``labels`` [S, G] i32 (-1 = not yet known; delivered at
+admission or any time later via :meth:`OutcomeRecorder.deliver`) and
+``scored`` [S, G] (which positions already recorded). Retention is the
+price of *late* outcomes — a label arriving after its position was
+decoded is scored without a second forward; outcomes arriving after
+eviction are dropped and counted.
 
 Each fused engine step scores AT MOST ONE position per slot — the oldest
 labeled-but-unscored one. One-per-step keeps every record a separate
@@ -48,29 +61,59 @@ from jax.sharding import Mesh
 from repro.core import device_ledger as dledger
 from repro.core.history import HistoryConfig, LossHistory
 from repro.distributed.ledger import ShardedLedgerOps, sharded_ledger_ops
+from repro.kernels import ops as kops
 
 Array = jax.Array
 I32 = jnp.int32
 F32 = jnp.float32
 
 LEDGERS = ("host", "device")
+RETENTIONS = ("full", "topk")
+
+
+def topk_score(
+    vals: Array, idx: Array, lse: Array, labels: Array
+) -> tuple[Array, Array]:
+    """Score labels against (top-k, lse) summaries -> (loss, hit).
+
+    ``vals``/``idx`` [..., K], ``lse``/``labels`` [...]. Exact
+    ``lse - logit[label]`` when the label is in the top-k set (``hit``);
+    on a miss the loss is the tail floor ``lse - min(topk)``, a certain
+    lower bound of the true loss (the missed logit is <= every retained
+    one). Negative labels never hit (the recorder's -1 sentinel).
+    """
+    inset = idx == labels[..., None]  # [..., K]
+    hit = inset.any(axis=-1) & (labels >= 0)
+    picked = jnp.sum(jnp.where(inset, vals.astype(F32), 0.0), axis=-1)
+    tail = jnp.min(vals.astype(F32), axis=-1)
+    return lse.astype(F32) - jnp.where(hit, picked, tail), hit
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class RecorderState:
-    """Device state of the outcome recorder (a pytree; see module doc)."""
+    """Device state of the outcome recorder (a pytree; see module doc).
+
+    Exactly one of (``logits``) / (``topk_vals``, ``topk_idx``, ``lse``)
+    is populated, per the owning recorder's ``retention`` mode; the
+    other mode's fields are None (absent pytree subtrees).
+    """
 
     ledger: Optional[dledger.LedgerState]  # None for ledger="host"
-    logits: Array  # [S, G, V] retained forwards
+    logits: Optional[Array]  # [S, G, V] retained forwards (retention="full")
+    topk_vals: Optional[Array]  # [S, G, K] f32 (retention="topk")
+    topk_idx: Optional[Array]  # [S, G, K] i32 (retention="topk")
+    lse: Optional[Array]  # [S, G] f32 exact lse (retention="topk")
     labels: Array  # [S, G] i32, -1 = unknown
     scored: Array  # [S, G] bool
     n_recorded: Array  # [] i32: ledger records made (diagnostics)
+    n_miss: Array  # [] i32: topk records clamped to the tail floor
 
     def tree_flatten(self):
         return (
-            self.ledger, self.logits, self.labels, self.scored,
-            self.n_recorded,
+            self.ledger, self.logits, self.topk_vals, self.topk_idx,
+            self.lse, self.labels, self.scored, self.n_recorded,
+            self.n_miss,
         ), None
 
     @classmethod
@@ -85,6 +128,12 @@ class OutcomeRecorder:
     adds the cross-shard exchange); without a mesh, a single device table.
     ``ledger="host"`` keeps a numpy ``LossHistory`` — device scoring, host
     table (the engine records the step's (ids, losses, valid) into it).
+
+    ``retention`` picks the retained-outcome layout (module doc):
+    ``"full"`` the dense [S, G, V] oracle, ``"topk"`` the compressed
+    (top-``topk`` values/indices, exact lse) summary; ``topk_impl``
+    forwards to ``kernels.ops.topk_lse`` ("ref"/"pallas"/"interpret",
+    None = the module default).
     """
 
     def __init__(
@@ -99,14 +148,23 @@ class OutcomeRecorder:
         dp_axes: Sequence[str] = ("data",),
         route: bool = False,
         logits_dtype=jnp.float32,
+        retention: str = "full",
+        topk: int = 64,
+        topk_impl: Optional[str] = None,
     ):
         assert ledger in LEDGERS, ledger
+        assert retention in RETENTIONS, retention
         self.slots = slots
         self.max_gen = max_gen
         self.vocab = vocab
         self.cfg = cfg
         self.ledger = ledger
         self.logits_dtype = jnp.dtype(logits_dtype)
+        self.retention = retention
+        self.topk = min(int(topk), vocab)
+        if self.topk <= 0:
+            raise ValueError(f"topk must be positive, got {topk}")
+        self.topk_impl = topk_impl
         self.ops: Optional[ShardedLedgerOps] = None
         self.host_history: Optional[LossHistory] = None
         if ledger == "device" and mesh is not None:
@@ -123,6 +181,21 @@ class OutcomeRecorder:
     def route(self) -> bool:
         return self.ops is not None and self.ops.route
 
+    def retained_bytes_per_slot(self) -> int:
+        """HBM footprint of one slot's retained outcomes (labels/scored
+        bookkeeping excluded — identical across modes)."""
+        g = self.max_gen
+        if self.retention == "full":
+            return g * self.vocab * self.logits_dtype.itemsize
+        # per position: K f32 values + K i32 indices + 1 f32 lse
+        return g * (self.topk * (4 + 4) + 4)
+
+    def _summarize(self, logits: Array) -> tuple[Array, Array, Array]:
+        """[T, V] -> (vals [T,K], idx [T,K], lse [T]) via the fused kernel."""
+        return kops.topk_lse(
+            logits.astype(F32), self.topk, impl=self.topk_impl
+        )
+
     # -- state ---------------------------------------------------------------
 
     def replicate(self, tree):
@@ -138,19 +211,27 @@ class OutcomeRecorder:
         return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
 
     def init_state(self) -> RecorderState:
-        s, g, v = self.slots, self.max_gen, self.vocab
+        s, g, v, k = self.slots, self.max_gen, self.vocab, self.topk
         if self.ledger == "host":
             led = None
         elif self.ops is not None:
             led = self.ops.init()
         else:
             led = dledger.init_state(self.cfg)
+        full = self.retention == "full"
         return RecorderState(
             ledger=led,
-            logits=self.replicate(jnp.zeros((s, g, v), self.logits_dtype)),
+            logits=self.replicate(jnp.zeros((s, g, v), self.logits_dtype))
+            if full else None,
+            topk_vals=None if full
+            else self.replicate(jnp.zeros((s, g, k), F32)),
+            topk_idx=None if full
+            else self.replicate(jnp.full((s, g, k), -1, I32)),
+            lse=None if full else self.replicate(jnp.zeros((s, g), F32)),
             labels=self.replicate(jnp.full((s, g), -1, I32)),
             scored=self.replicate(jnp.zeros((s, g), bool)),
             n_recorded=self.replicate(jnp.zeros((), I32)),
+            n_miss=self.replicate(jnp.zeros((), I32)),
         )
 
     # -- pure functions (traced inside the engine's jitted step) -------------
@@ -163,33 +244,55 @@ class OutcomeRecorder:
         labels_row: Array,
     ) -> RecorderState:
         """Reset a slot at admission; position 0's logits come from prefill."""
-        logits = state.logits.at[slot].set(
-            jnp.zeros((self.max_gen, self.vocab), self.logits_dtype)
-        )
-        logits = logits.at[slot, 0].set(logits0.astype(self.logits_dtype))
-        return RecorderState(
-            ledger=state.ledger,
-            logits=logits,
+        g, v, k = self.max_gen, self.vocab, self.topk
+        if self.retention == "full":
+            logits = state.logits.at[slot].set(
+                jnp.zeros((g, v), self.logits_dtype)
+            )
+            retained = dict(
+                logits=logits.at[slot, 0].set(
+                    logits0.astype(self.logits_dtype)
+                ),
+            )
+        else:
+            v0, i0, l0 = self._summarize(logits0[None, :])
+            retained = dict(
+                topk_vals=state.topk_vals.at[slot]
+                .set(jnp.zeros((g, k), F32)).at[slot, 0].set(v0[0]),
+                topk_idx=state.topk_idx.at[slot]
+                .set(jnp.full((g, k), -1, I32)).at[slot, 0].set(i0[0]),
+                lse=state.lse.at[slot]
+                .set(jnp.zeros((g,), F32)).at[slot, 0].set(l0[0]),
+            )
+        return dataclasses.replace(
+            state,
             labels=state.labels.at[slot].set(labels_row.astype(I32)),
-            scored=state.scored.at[slot].set(
-                jnp.zeros((self.max_gen,), bool)
-            ),
-            n_recorded=state.n_recorded,
+            scored=state.scored.at[slot].set(jnp.zeros((g,), bool)),
+            **retained,
         )
 
     def observe(
         self, state: RecorderState, gen_idx: Array, logits: Array,
         writing: Array,
     ) -> RecorderState:
-        """Retain this step's decode logits at [slot, gen_idx] where
-        ``writing``; masked rows scatter out of bounds and are dropped."""
+        """Retain this step's decode outcome summary at [slot, gen_idx]
+        where ``writing``; masked rows scatter out of bounds and are
+        dropped."""
         bidx = jnp.arange(self.slots)
         tgt = jnp.where(writing, gen_idx, self.max_gen)
+        if self.retention == "full":
+            return dataclasses.replace(
+                state,
+                logits=state.logits.at[bidx, tgt].set(
+                    logits.astype(self.logits_dtype), mode="drop"
+                ),
+            )
+        vals, idx, lse = self._summarize(logits)
         return dataclasses.replace(
             state,
-            logits=state.logits.at[bidx, tgt].set(
-                logits.astype(self.logits_dtype), mode="drop"
-            ),
+            topk_vals=state.topk_vals.at[bidx, tgt].set(vals, mode="drop"),
+            topk_idx=state.topk_idx.at[bidx, tgt].set(idx, mode="drop"),
+            lse=state.lse.at[bidx, tgt].set(lse, mode="drop"),
         )
 
     def deliver(
@@ -215,10 +318,12 @@ class OutcomeRecorder:
     ) -> tuple[RecorderState, dict[str, Array]]:
         """Score the oldest labeled-but-unscored position of every slot.
 
-        Returns the updated state and {loss, valid, pending}: per-slot loss
-        of the scored position (``valid`` marks slots that recorded one) and
-        ``pending`` — whether labeled-unscored positions remain (the drain
-        signal eviction waits on).
+        Returns the updated state and {loss, valid, pending, miss}:
+        per-slot loss of the scored position (``valid`` marks slots that
+        recorded one; ``miss`` the valid records clamped to the top-k
+        tail floor — always all-False under retention="full") and
+        ``pending`` — whether labeled-unscored positions remain (the
+        drain signal eviction waits on).
         """
         s, g = self.slots, self.max_gen
         bidx = jnp.arange(s)
@@ -230,18 +335,32 @@ class OutcomeRecorder:
         )  # [S, G]
         has = cand.any(axis=1)
         pos = jnp.argmax(cand, axis=1)  # first True (0 if none; masked out)
-        sel_logits = jnp.take_along_axis(
-            state.logits, pos[:, None, None], axis=1
-        )[:, 0].astype(F32)  # [S, V]
         sel_label = jnp.take_along_axis(state.labels, pos[:, None], axis=1)[
             :, 0
         ]
-        lse = jax.nn.logsumexp(sel_logits, axis=-1)
-        picked = jnp.take_along_axis(
-            sel_logits, jnp.maximum(sel_label, 0)[:, None], axis=-1
-        )[:, 0]
-        loss = lse - picked
+        if self.retention == "full":
+            sel_logits = jnp.take_along_axis(
+                state.logits, pos[:, None, None], axis=1
+            )[:, 0].astype(F32)  # [S, V]
+            lse = jax.nn.logsumexp(sel_logits, axis=-1)
+            picked = jnp.take_along_axis(
+                sel_logits, jnp.maximum(sel_label, 0)[:, None], axis=-1
+            )[:, 0]
+            loss = lse - picked
+            hit = jnp.ones((s,), bool)
+        else:
+            sel_vals = jnp.take_along_axis(
+                state.topk_vals, pos[:, None, None], axis=1
+            )[:, 0]  # [S, K]
+            sel_idx = jnp.take_along_axis(
+                state.topk_idx, pos[:, None, None], axis=1
+            )[:, 0]
+            sel_lse = jnp.take_along_axis(state.lse, pos[:, None], axis=1)[
+                :, 0
+            ]
+            loss, hit = topk_score(sel_vals, sel_idx, sel_lse, sel_label)
         valid = has & (inst >= 0)
+        miss = valid & ~hit
         scored = state.scored.at[
             bidx, jnp.where(valid, pos, g)
         ].set(True, mode="drop")
@@ -253,17 +372,19 @@ class OutcomeRecorder:
                 ledger = dledger.record(
                     self.cfg, ledger, inst, loss, step, valid=valid
                 )
-        new = RecorderState(
+        new = dataclasses.replace(
+            state,
             ledger=ledger,
-            logits=state.logits,
-            labels=state.labels,
             scored=scored,
             n_recorded=state.n_recorded + valid.sum().astype(I32),
+            n_miss=state.n_miss + miss.sum().astype(I32),
         )
         pending = (
             (new.labels >= 0) & ~new.scored & (giota < produced[:, None])
         ).any(axis=1)
-        return new, {"loss": loss, "valid": valid, "pending": pending}
+        return new, {
+            "loss": loss, "valid": valid, "pending": pending, "miss": miss,
+        }
 
     # -- host interchange ----------------------------------------------------
 

@@ -54,6 +54,31 @@ def test_up_good_metrics_and_ratio_key_axis():
     assert not any("ratio=0.25" in w for w in warns)  # improvement: quiet
 
 
+def test_retained_memory_rows_keyed_and_directed():
+    """Serving retained-memory rows: ``vocab``/``topk`` are config axes
+    (key), ``bytes_per_slot`` regresses UP, ``max_slots_per_gib`` regresses
+    DOWN — a compression regression in either direction warns."""
+    hdr = "table,path,vocab,topk,gen,bytes_per_slot,max_slots_per_gib"
+    prev = "\n".join([
+        hdr,
+        "serving,retained[full],151936,0,16,4861952,220",
+        "serving,retained[topk],151936,64,16,4128,260111",
+    ])
+    curr = "\n".join([
+        hdr,
+        "serving,retained[full],151936,0,16,4861952,220",
+        "serving,retained[topk],151936,64,16,8256,130055",  # 2x fatter
+    ])
+    rows = parse_tables(curr)
+    assert ("serving", "retained[topk]", "vocab=151936", "topk=64",
+            "gen=16") in rows
+    warns, _ = diff(prev, curr, threshold=0.25)
+    assert any("retained[topk]" in w and "bytes_per_slot" in w for w in warns)
+    assert any("retained[topk]" in w and "max_slots_per_gib" in w
+               for w in warns)
+    assert not any("retained[full]" in w for w in warns)
+
+
 def test_missing_and_new_rows_reported():
     prev = HDR_SEL + "\nselection,gone,128,1.0,0.1"
     curr = HDR_SEL + "\nselection,new,128,1.0,0.1"

@@ -8,6 +8,7 @@ import pytest
 from repro.kernels import decode_attn as DA_mod
 from repro.kernels import ops, ref
 from repro.kernels import ssd as SSD_mod
+from repro.kernels import topk_lse as TK_mod
 from repro.kernels import xent as X_mod
 
 RNG = jax.random.key(7)
@@ -57,6 +58,119 @@ def test_xent_extreme_logits_stable():
     loss, _ = X_mod.xent_fwd(logits, labels, bt=8, bv=128, interpret=True)
     assert np.isfinite(np.asarray(loss)).all()
     np.testing.assert_allclose(np.asarray(loss), 0.0, atol=1e-3)
+
+
+@pytest.mark.parametrize("t,v", [(5, 97), (13, 130), (9, 257)])
+def test_xent_negative_label_parity(t, v):
+    """The -1 "unknown" sentinel must mean NO HIT (loss = lse) in both the
+    kernel and the ref oracle. Pre-fix, ref's take_along_axis wrapped -1
+    to the LAST vocab column (loss = lse - logits[:, -1]) while the
+    kernel scored lse — a silent kernel/oracle disagreement on exactly
+    the label value the recorder uses for unlabeled positions."""
+    logits = jax.random.normal(RNG, (t, v), jnp.float32) * 3
+    labels = np.array(jax.random.randint(RNG, (t,), 0, v))
+    labels[::2] = -1  # mix sentinel and real labels
+    labels = jnp.asarray(labels)
+    loss, lse = X_mod.xent_fwd(logits, labels, bt=8, bv=128, interpret=True)
+    rl, rlse = ref.xent_ref(logits, labels)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(rl),
+                               atol=1e-5, rtol=1e-5)
+    neg = np.asarray(labels) < 0
+    np.testing.assert_allclose(np.asarray(loss)[neg], np.asarray(lse)[neg],
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("t,v", [(5, 97), (100, 1000), (13, 513)])
+def test_xent_bwd_nonmultiple_shapes_parity(t, v):
+    """fwd+bwd parity at non-multiple-of-8 T / non-multiple-of-128 V —
+    the padded-region regime where the fwd's label pad fill used to
+    differ from the bwd's (0 vs -1, aliasing pad rows onto vocab col 0).
+    Sentinel labels ride along: grad rows for -1 labels are pure p*g."""
+    logits = jax.random.normal(RNG, (t, v), jnp.float32) * 3
+    labels = np.array(jax.random.randint(RNG, (t,), 0, v))
+    labels[1::3] = -1
+    labels = jnp.asarray(labels)
+    g = jax.random.normal(RNG, (t,))
+    loss, lse = X_mod.xent_fwd(logits, labels, bt=32, bv=256, interpret=True)
+    rl, rlse = ref.xent_ref(logits, labels)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(rl),
+                               atol=1e-5, rtol=1e-5)
+    grad = X_mod.xent_bwd(logits, labels, lse, g, bt=32, bv=256,
+                          interpret=True)
+    gref = ref.xent_grad_ref(logits, labels, lse, g)
+    np.testing.assert_allclose(np.asarray(grad), np.asarray(gref), atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# topk_lse (retained-outcome summary)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "t,v,k",
+    [(8, 128, 8), (5, 97, 16), (33, 513, 32), (100, 1000, 64), (3, 300, 64)],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_lse_matches_ref(t, v, k, dtype):
+    """Streaming top-k merge + online lse vs jax.lax.top_k + logsumexp,
+    across multi-block vocab, padded T/V remainders and k > bv slices."""
+    logits = (jax.random.normal(RNG, (t, v), jnp.float32) * 3).astype(dtype)
+    vals, idx, lse = TK_mod.topk_lse(logits, k, bt=16, bv=256,
+                                     interpret=True)
+    rv, ri, rl = ref.topk_lse_ref(logits, k)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv),
+                               atol=tol, rtol=tol)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(rl),
+                               atol=tol, rtol=tol)
+
+
+def test_topk_lse_tie_break_lowest_index():
+    """Duplicate values across vocab blocks: ties resolve to the lowest
+    index, first-occurrence order — jax.lax.top_k semantics."""
+    row = np.array([2.0, 5.0, 5.0, 1.0, 5.0, 0.0, 2.0, 7.0], np.float32)
+    logits = jnp.asarray(np.tile(row, (4, 32)))  # [4, 256], 2 vocab blocks
+    vals, idx, lse = TK_mod.topk_lse(logits, 9, bv=128, interpret=True)
+    rv, ri, rl = ref.topk_lse_ref(logits, 9)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv))
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(rl), rtol=1e-6)
+
+
+def test_topk_lse_extreme_logits_stable():
+    logits = jnp.asarray([[1e4, -1e4, 0.0, 5e3] * 64] * 8, jnp.float32)
+    vals, idx, lse = TK_mod.topk_lse(logits, 4, interpret=True)
+    assert np.isfinite(np.asarray(lse)).all()
+    assert np.isfinite(np.asarray(vals)).all()
+    np.testing.assert_allclose(np.asarray(vals[:, 0]), 1e4)
+
+
+def test_topk_lse_k_equals_v_recovers_everything():
+    """k == V: the summary is lossless (a value-sorted permutation)."""
+    logits = jax.random.normal(RNG, (6, 130), jnp.float32)
+    vals, idx, lse = TK_mod.topk_lse(logits, 130, bv=128, interpret=True)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(vals), axis=-1)[:, ::-1], np.asarray(vals),
+        err_msg="values must come back descending",
+    )
+    # every column accounted for exactly once
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(idx), axis=-1), np.arange(130)[None, :].repeat(6, 0)
+    )
+
+
+def test_topk_lse_ops_dispatch():
+    logits = jax.random.normal(RNG, (8, 200), jnp.float32)
+    a = ops.topk_lse(logits, 16, "ref")
+    b = ops.topk_lse(logits, 16, "interpret")
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=1e-5, rtol=1e-5)
+    with pytest.raises(ValueError):
+        TK_mod.topk_lse(logits, 0, interpret=True)
+    with pytest.raises(ValueError):
+        TK_mod.topk_lse(logits, 201, interpret=True)
 
 
 # ---------------------------------------------------------------------------

@@ -193,6 +193,60 @@ def test_deliver_before_admission_attaches_to_queued_request(params):
     assert s["missed_outcomes"] == 0
 
 
+def test_labels_beyond_max_new_dropped_and_counted(params):
+    """[bugfix] Late-label truncation mismatch: admission always truncated
+    labels to the request's max_new, but deliver_outcome accepted them up
+    to recorder.max_gen — positions >= max_new have no decoded logits and
+    were silently unscoreable, without ever being counted. Both paths must
+    cut at max_new and count the dropped positions in missed_outcomes."""
+    rs = np.random.default_rng(43)
+    eng = make_engine(params, slots=2)
+    # late path: max_new=3 but 6 labels delivered mid-residency
+    iid = eng.submit(rs.integers(0, CFG.vocab_size, 6), max_new=3,
+                     expect_labels=True)
+    extra = rs.integers(0, CFG.vocab_size, 6)
+    eng.run(max_steps=300, on_step=delayed_outcomes([(iid, extra)], delay=1))
+    s = eng.stats()
+    assert s["evicted"] == 1 and s["recorded"] == 3, s
+    assert s["missed_outcomes"] == 3, s
+    # admission path: labels attached at submit get the same cut + count
+    eng.submit(rs.integers(0, CFG.vocab_size, 6), max_new=2,
+               labels=rs.integers(0, CFG.vocab_size, 5))
+    eng.run(max_steps=300)
+    s = eng.stats()
+    assert s["recorded"] == 5 and s["missed_outcomes"] == 6, s
+
+
+def test_explicit_id_advances_auto_lane(params):
+    """[bugfix] An explicit instance id on the engine's auto-assign lane
+    used to collide with a later auto id, silently merging two requests'
+    records under one ledger id."""
+    rs = np.random.default_rng(47)
+    eng = make_engine(params, slots=4)
+
+    def req(**kw):
+        return eng.submit(rs.integers(0, CFG.vocab_size, 5), max_new=2,
+                          labels=rs.integers(0, CFG.vocab_size, 2), **kw)
+
+    a = req()                 # auto: 0
+    b = req(instance_id=1)    # explicit, on the lane
+    c = req()                 # pre-fix: 1 again — collides with b
+    assert len({a, b, c}) == 3, (a, b, c)
+    eng.run(max_steps=200)
+    sd = eng.ledger_state_dict()
+    for iid in (a, b, c):
+        slot = slot_for(np.asarray([iid]), LCFG.capacity)[0]
+        # each id's ledger slot holds exactly its own 2 observations
+        assert sd["owner"][slot] == iid and sd["count"][slot] == 2, iid
+    # off-lane explicit ids leave the auto lane alone; on-lane ids ahead
+    # of the cursor jump it past them
+    eng2 = make_engine(params, slots=2, id_start=0, id_stride=2)
+    eng2.submit(rs.integers(0, CFG.vocab_size, 5), instance_id=7)  # off-lane
+    assert eng2.submit(rs.integers(0, CFG.vocab_size, 5)) == 0
+    eng2.submit(rs.integers(0, CFG.vocab_size, 5), instance_id=6)  # on-lane
+    assert eng2.submit(rs.integers(0, CFG.vocab_size, 5)) == 8
+
+
 def test_outcome_after_eviction_is_counted_missed(params):
     eng = make_engine(params, slots=2)
     (prompt, gen, labels) = random_requests(1, seed=9)[0]

@@ -72,6 +72,38 @@ assert (sd_r["owner"][slots] == np.asarray(ids)).all()
 led = eng_routed._rstate.ledger
 shardings = {str(d.sharding.spec) for d in (led.ema, led.owner)}
 assert shardings == {"PartitionSpec('data',)"}, shardings
+
+# LATE-outcome delivery on the routed mesh, with the compressed topk
+# retention: deliver_outcome routes each delivered row through
+# recorder.replicate, so the updated labels stay mesh-placed and the next
+# guarded fused step never needs an implicit transfer. The routed
+# late-delivery table must still match a single-table late run of the
+# same schedule bit-for-bit.
+from jax.sharding import NamedSharding
+from repro.serving import delayed_outcomes
+
+def run_late(mesh, route):
+    rec = OutcomeRecorder(SLOTS, GEN, cfg.vocab_size, lcfg,
+                          ledger="device", mesh=mesh, route=route,
+                          retention="topk", topk=16)
+    eng = Engine(cfg, params, rec, slots=SLOTS, max_prompt=MP, max_gen=GEN)
+    outs = [(eng.submit(p, max_new=g, expect_labels=True), l[:g])
+            for p, g, l in schedule()]
+    eng.run(max_steps=800, on_step=delayed_outcomes(outs, 2))
+    assert eng.stats()["in_flight"] == 0, eng.stats()
+    return eng
+
+late_routed = run_late(mesh, True)
+assert int(late_routed.stats()["recorded"]) == want, late_routed.stats()
+lab = late_routed._rstate.labels
+assert isinstance(lab.sharding, NamedSharding), lab.sharding
+assert dict(lab.sharding.mesh.shape) == {"data": 4}, lab.sharding
+late_single = run_late(None, False)
+sd_lr, sd_ls = (late_routed.ledger_state_dict(),
+                late_single.ledger_state_dict())
+for k in ("ema", "count", "last_seen", "owner"):
+    np.testing.assert_array_equal(np.asarray(sd_lr[k]), np.asarray(sd_ls[k]),
+                                  err_msg="late-" + k)
 print("SERVING-SHARDED-OK")
 """
 
