@@ -32,7 +32,7 @@ _UP_GOOD = ("tok_per_s", "ratio", "hit", "accuracy", "max_slots")
 # max_slots_per_gib are the metrics there: a bytes_per_slot increase or a
 # max_slots_per_gib drop flags a retained-outcome memory regression)
 _KEY_COLS = ("n", "capacity", "batch", "slots", "gen", "size", "steps",
-             "seq", "shape", "ratio", "vocab", "topk")
+             "seq", "shape", "ratio", "vocab", "topk", "policy")
 
 
 def parse_tables(text: str) -> dict[tuple, dict[str, float]]:
@@ -97,6 +97,53 @@ def diff(prev: str, curr: str, threshold: float) -> tuple[list[str], list[str]]:
     return warns, infos
 
 
+def policy_check(curr: str, threshold: float) -> list[str]:
+    """Within-run A/B verdicts for the per-policy benchmark rows.
+
+    Rows keyed by a ``policy=...`` axis (fig2_mnist_policy,
+    table3_lm_policy) are grouped by their remaining key (table + ratio
+    + ...) and every policy is compared against BOTH controls in its
+    group — ``uniform`` (a signal that stops beating blind sampling has
+    stopped paying for itself) and ``loss_ema`` (the paper's baseline
+    signal). Unlike :func:`diff`, this needs no previous-run file: the
+    controls ride in the same run at matched compute, so the check also
+    fires on the very first nightly.
+    """
+    rows = parse_tables(curr)
+    groups: dict[tuple, dict[str, dict[str, float]]] = {}
+    for key, vals in rows.items():
+        pol, rest = None, []
+        for cell in key:
+            if cell.startswith("policy="):
+                pol = cell[len("policy="):]
+            else:
+                rest.append(cell)
+        if pol is not None:
+            groups.setdefault(tuple(rest), {})[pol] = vals
+    warns = []
+    for gkey, pols in sorted(groups.items()):
+        for base in ("uniform", "loss_ema"):
+            bvals = pols.get(base)
+            if bvals is None:
+                continue
+            for pol, vals in sorted(pols.items()):
+                if pol == base or (base == "loss_ema" and pol == "uniform"):
+                    continue  # the blind control owes the signal nothing
+                for col, cv in vals.items():
+                    bv = bvals.get(col)
+                    if bv is None or bv == 0:
+                        continue
+                    rel = (cv - bv) / abs(bv)
+                    up_good = any(frag in col for frag in _UP_GOOD)
+                    if (-rel if up_good else rel) > threshold:
+                        warns.append(
+                            f"POLICY {pol} behind {base} on "
+                            f"{','.join(gkey)} {col}: "
+                            f"{bv:.4g} -> {cv:.4g} ({rel:+.1%})"
+                        )
+    return warns
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("prev")
@@ -106,25 +153,44 @@ def main(argv=None) -> int:
                          "(generous: shared CI runners are noisy)")
     ap.add_argument("--summary-out", default="",
                     help="append a markdown summary (GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--policy-threshold", type=float, default=0.02,
+                    help="relative deficit vs the in-run uniform/loss_ema "
+                         "controls that flags a policy (tighter than "
+                         "--threshold: controls share the run, so runner "
+                         "noise largely cancels)")
     args = ap.parse_args(argv)
+    curr = open(args.curr).read()
+    lines = ["## Nightly benchmark trend", ""]
     try:
         prev = open(args.prev).read()
     except OSError as e:
-        print(f"no previous results ({e}); nothing to diff")
-        return 0
-    curr = open(args.curr).read()
-    warns, infos = diff(prev, curr, args.threshold)
-    lines = ["## Nightly benchmark trend", ""]
-    if warns:
-        lines.append(f"⚠️ {len(warns)} possible regression(s) vs previous "
-                     f"run (threshold {args.threshold:.0%}, fail-soft):")
-        lines += [f"- {w}" for w in warns]
+        lines.append(f"no previous results ({e}); nothing to diff")
+        prev = None
+    if prev is not None:
+        warns, infos = diff(prev, curr, args.threshold)
+        if warns:
+            lines.append(f"⚠️ {len(warns)} possible regression(s) vs "
+                         f"previous run (threshold {args.threshold:.0%}, "
+                         "fail-soft):")
+            lines += [f"- {w}" for w in warns]
+        else:
+            lines.append(f"✅ no regressions beyond {args.threshold:.0%} vs "
+                         "the previous run")
+        if infos:
+            lines.append("")
+            lines += [f"- {i}" for i in infos]
+    # the policy A/B verdict is within-run: it fires with or without prev
+    pwarns = policy_check(curr, args.policy_threshold)
+    lines.append("")
+    if pwarns:
+        lines.append(f"⚠️ {len(pwarns)} selection polic(ies) behind their "
+                     f"in-run control (threshold "
+                     f"{args.policy_threshold:.0%}):")
+        lines += [f"- {w}" for w in pwarns]
     else:
-        lines.append(f"✅ no regressions beyond {args.threshold:.0%} vs the "
-                     "previous run")
-    if infos:
-        lines.append("")
-        lines += [f"- {i}" for i in infos]
+        lines.append("✅ every selection policy within "
+                     f"{args.policy_threshold:.0%} of (or ahead of) the "
+                     "uniform and loss_ema controls")
     out = "\n".join(lines)
     print(out)
     if args.summary_out:

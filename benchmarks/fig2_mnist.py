@@ -11,7 +11,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.selection import SelectionConfig, select
+from repro.core.selection import (
+    POLICIES,
+    SelectionConfig,
+    get_policy,
+    policy_score,
+    select,
+    select_by_score,
+)
 from repro.data import mnist_like
 
 
@@ -88,8 +95,90 @@ def train_mnist(
     return acc
 
 
+def signals_ce(params, x, y):
+    """Per-example (ce, entropy, margin) in one forward — the bench twin
+    of the serving recorder's signal derivation."""
+    logits = forward(params, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    ce = lse - picked
+    p = jax.nn.softmax(logits, axis=-1)
+    ent = lse - jnp.sum(p * logits, axis=-1)
+    top2 = jax.lax.top_k(logits, 2)[0]
+    mar = top2[:, 0] - top2[:, 1]
+    return ce, ent, mar
+
+
+def train_mnist_policy(
+    policy_name: str,
+    ratio: float,
+    *,
+    epochs: int = 20,
+    batch: int = 128,
+    lr: float = 0.1,
+    seed: int = 0,
+    decay: float = 0.9,
+    cold: float = 1e3,
+) -> float:
+    """A/B harness arm: train under a ``SelectionPolicy`` at MATCHED compute.
+
+    Every arm (uniform control included) pays exactly the same budget per
+    step — one forward + backward on the ``b = ratio * batch`` rows the
+    policy picked; there is no selection forward. The policy sees only the
+    recycled per-example ledger (loss EMA + entropy/margin signal EMAs,
+    updated from the rows it chose to train on, exactly like the serve ->
+    recycle loop) — so arms differ ONLY in how they score the ledger.
+    """
+    xtr, ytr, xte, yte = mnist_like(8192, 2048, seed=0)
+    xtr, ytr = jnp.asarray(xtr), jnp.asarray(ytr)
+    xte, yte = jnp.asarray(xte), jnp.asarray(yte)
+    params = init_mlp(jax.random.key(seed))
+    pol = get_policy(policy_name)
+    b = SelectionConfig(method="obftf", ratio=ratio).budget(batch)
+    n = xtr.shape[0]
+    ema = jnp.zeros((n,), jnp.float32)
+    sig = jnp.zeros((n, 2), jnp.float32)  # AUX_CHANNELS order
+    seen = jnp.zeros((n,), bool)
+
+    @jax.jit
+    def step(params, ema, sig, seen, rng, idx):
+        scores = policy_score(pol, ema[idx], sig[idx], seen[idx], cold)
+        sel = select_by_score(rng, scores, b)
+        rows = idx[sel]
+
+        def mean_ce(p):
+            ce, ent, mar = signals_ce(p, xtr[rows], ytr[rows])
+            return jnp.mean(ce), (ce, ent, mar)
+
+        (_, (ce, ent, mar)), grads = jax.value_and_grad(
+            mean_ce, has_aux=True
+        )(params)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        ce = jax.lax.stop_gradient(ce)
+        new_sig = jax.lax.stop_gradient(jnp.stack([ent, mar], axis=-1))
+        prev_e = jnp.where(seen[rows], ema[rows], ce)
+        prev_s = jnp.where(seen[rows, None], sig[rows], new_sig)
+        ema = ema.at[rows].set(decay * prev_e + (1 - decay) * ce)
+        sig = sig.at[rows].set(decay * prev_s + (1 - decay) * new_sig)
+        seen = seen.at[rows].set(True)
+        return params, ema, sig, seen
+
+    rng = jax.random.key(seed + 1)
+    for _ in range(epochs):
+        rng, kperm = jax.random.split(rng)
+        order = jax.random.permutation(kperm, n)
+        for i in range(n // batch):
+            rng, k = jax.random.split(rng)
+            idx = order[i * batch : (i + 1) * batch]
+            params, ema, sig, seen = step(params, ema, sig, seen, k, idx)
+
+    acc = float(jnp.mean(jnp.argmax(forward(params, xte), -1) == yte))
+    return acc
+
+
 METHODS = ("uniform", "prob", "mink", "obftf")
 RATIOS = (0.1, 0.25, 0.5)
+POLICY_RATIOS = (0.1, 0.25)
 
 
 def main(fast: bool = False) -> list[str]:
@@ -101,6 +190,14 @@ def main(fast: bool = False) -> list[str]:
         for ratio in RATIOS:
             acc = train_mnist(method, ratio, epochs=epochs)
             out.append(f"fig2_mnist,{method},{ratio},{acc:.4f}")
+    # policy A/B arms: same epochs, same matched per-step budget; the
+    # uniform row is the control diff_tables compares every policy against
+    out.append("")
+    out.append("table,policy,ratio,test_accuracy")
+    for policy in sorted(POLICIES):
+        for ratio in POLICY_RATIOS:
+            acc = train_mnist_policy(policy, ratio, epochs=epochs)
+            out.append(f"fig2_mnist_policy,{policy},{ratio},{acc:.4f}")
     return out
 
 

@@ -51,13 +51,47 @@ def bench_one(method: str, n: int, trials: int = 20) -> tuple[float, float]:
     return us, float(np.median(resids))
 
 
+def bench_policy(policy_name: str, n: int, trials: int = 20) -> float:
+    """us/call of the full policy pick: multi-channel ``policy_score`` +
+    ``select_by_score``, one jit — what a policy-driven feed pays per
+    batch on top of the ledger lookup."""
+    from repro.core.history import N_AUX
+    from repro.core.selection import (
+        get_policy, policy_score, select_by_score,
+    )
+
+    pol = get_policy(policy_name)
+    b = max(1, n // 4)
+    k = jax.random.key(0)
+    ema = jnp.abs(jax.random.normal(k, (n,))) * 2
+    sig = jnp.abs(jax.random.normal(k, (n, N_AUX)))
+    seen = jax.random.uniform(k, (n,)) < 0.8
+    f = jax.jit(
+        lambda r, e, s, sn: select_by_score(
+            r, policy_score(pol, e, s, sn, 1e3), b
+        )
+    )
+    f(k, ema, sig, seen).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for i in range(trials):
+        f(jax.random.key(i), ema, sig, seen).block_until_ready()
+    return (time.perf_counter() - t0) / trials * 1e6
+
+
 def main(fast: bool = False) -> list[str]:
+    from repro.core.selection import POLICIES
+
     sizes = SIZES[:2] if fast else SIZES
     out = ["table,method,n,us_per_call,median_residual"]
     for n in sizes:
         for m in METHODS:
             us, resid = bench_one(m, n)
             out.append(f"selection,{m},{n},{us:.1f},{resid:.5f}")
+    out.append("")
+    out.append("table,policy,n,us_per_call")
+    for n in sizes:
+        for p in sorted(POLICIES):
+            out.append(f"selection_policy,{p},{n},{bench_policy(p, n):.1f}")
     return out
 
 
@@ -122,6 +156,31 @@ def bench_ledger_device(
                               trials)
 
 
+def bench_ledger_signals(capacity: int, batch: int, trials: int) -> float:
+    """Multi-channel transaction: record loss + entropy/margin signal
+    EMAs, then a policy-scored lookup — the full serve-signal recycle
+    step, one jit. Runs in the shared transfer-guarded loop, so the row
+    doubles as proof the signal channels never touch the host."""
+    from repro.core.device_ledger import init_state, lookup_signals, record
+    from repro.core.history import HistoryConfig
+    from repro.core.selection import get_policy, policy_score
+
+    cfg = HistoryConfig(capacity=capacity)
+    pol = get_policy("entropy")
+
+    def tx(st, ids, losses, step):
+        # stand-in signals derived on device (a real engine stacks the
+        # recorder's entropy/margin); shape/dtype match AUX_CHANNELS
+        signals = jnp.stack([jnp.abs(losses), jnp.abs(losses) * 0.5], -1)
+        st = record(cfg, st, ids, losses, step, signals=signals)
+        ema, sig, seen = lookup_signals(st, ids)
+        return st, policy_score(pol, ema, sig, seen, 1e3)
+
+    step_fn = jax.jit(tx, donate_argnums=(0,))
+    return _timed_ledger_loop(step_fn, init_state(cfg), capacity, batch,
+                              trials)
+
+
 def bench_ledger_routed(capacity: int, batch: int, trials: int) -> float:
     """The routed sharded path (shard_map + cross-shard exchange before
     the table visit). Off a multi-chip mesh the exchange degenerates to
@@ -151,6 +210,8 @@ def main_ledger(fast: bool = False) -> list[str]:
         ("host", lambda: bench_ledger_host(capacity, batch, trials)),
         ("device", lambda: bench_ledger_device(capacity, batch, trials,
                                                "ref")),
+        ("device[signals]",
+         lambda: bench_ledger_signals(capacity, batch, trials)),
         ("device[routed]",
          lambda: bench_ledger_routed(capacity, batch, trials)),
         (f"pallas[{pallas_impl}]",

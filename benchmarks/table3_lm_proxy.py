@@ -15,12 +15,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core import device_ledger as dledger
+from repro.core.history import HistoryConfig
 from repro.core.obftf import OBFTFConfig, make_eval_step, make_train_step
-from repro.core.selection import SelectionConfig
+from repro.core.selection import (
+    POLICIES,
+    SelectionConfig,
+    get_policy,
+    policy_score,
+    select_by_score,
+)
 from repro.data import DataConfig, SyntheticLMStream
 from repro.models import model as Mdl
 from repro.models.params import materialize
-from repro.optim import adamw, warmup_cosine
+from repro.optim import adamw, apply_updates, warmup_cosine
 
 
 def train_lm(
@@ -66,8 +74,89 @@ def train_lm(
     return float(np.mean(np.concatenate(evals)))
 
 
+def train_lm_policy(
+    policy_name: str,
+    ratio: float,
+    *,
+    steps: int = 150,
+    batch: int = 32,
+    seq: int = 64,
+    seed: int = 0,
+) -> float:
+    """A/B harness arm: the recycle loop under one ``SelectionPolicy``.
+
+    Mirrors the production device-ledger path end to end: a small
+    instance pool so ids recur, an in-jit ``lookup_signals`` ->
+    ``policy_score`` -> ``select_by_score`` pick of ``b = ratio * batch``
+    examples, one forward + backward on exactly those (matched compute
+    across arms — the uniform control pays the same budget), and a
+    multi-channel ledger record (loss + entropy/margin) of what was
+    trained on. Arms differ ONLY in how the ledger is scored.
+    """
+    cfg = configs.get_smoke("llama3_8b")
+    pol = get_policy(policy_name)
+    b = max(1, int(round(ratio * batch)))
+    loss_fn = Mdl.loss_fn(cfg)
+    opt = adamw(warmup_cosine(3e-3, max(1, steps // 10), steps))
+    eval_fn = jax.jit(make_eval_step(loss_fn))
+    lcfg = HistoryConfig(capacity=1 << 10)
+    lstate = dledger.init_state(lcfg)
+    stream = SyntheticLMStream(
+        DataConfig(batch, seq, cfg.vocab_size, seed=seed,
+                   instance_pool=batch * 4)
+    )
+
+    rng = jax.random.key(seed)
+    params = materialize(Mdl.param_specs(cfg), rng)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+
+    @jax.jit
+    def jstep(state, lstate, bt, rng):
+        ids = bt["instance_id"]
+        ema, sig, seen = dledger.lookup_signals(lstate, ids)
+        scores = policy_score(pol, ema, sig, seen, 1e3)
+        sel = select_by_score(rng, scores, b)
+        sub = {"tokens": bt["tokens"][sel], "labels": bt["labels"][sel]}
+
+        def mean_loss(p):
+            loss, s, _aux = Mdl.per_example_signals(p, cfg, sub)
+            return jnp.mean(loss), (loss, s)
+
+        (_, (loss, s)), grads = jax.value_and_grad(
+            mean_loss, has_aux=True
+        )(state["params"])
+        updates, opt_state = opt.update(grads, state["opt"], state["params"])
+        new_state = {"params": apply_updates(state["params"], updates),
+                     "opt": opt_state, "step": state["step"] + 1}
+        signals = jnp.stack([s["entropy"], s["margin"]], axis=-1)
+        lstate = dledger.record(
+            lcfg, lstate, ids[sel], jax.lax.stop_gradient(loss),
+            new_state["step"],
+            signals=jax.lax.stop_gradient(signals),
+        )
+        return new_state, lstate
+
+    for t in range(steps):
+        raw = stream.batch(t)
+        bt = {"tokens": jnp.asarray(raw["tokens"]),
+              "labels": jnp.asarray(raw["labels"]),
+              "instance_id": jnp.asarray(raw["instance_id"].astype(np.int32))}
+        rng, k = jax.random.split(rng)
+        state, lstate = jstep(state, lstate, bt, k)
+
+    evals = []
+    for t in range(10_000, 10_004):
+        raw = stream.batch(t)
+        bt = {"tokens": jnp.asarray(raw["tokens"]),
+              "labels": jnp.asarray(raw["labels"])}
+        evals.append(np.asarray(eval_fn(state["params"], bt, rng)))
+    return float(np.mean(np.concatenate(evals)))
+
+
 METHODS = ("uniform", "maxk", "obftf")
 RATIOS = (0.1, 0.25, 0.45)
+POLICY_RATIOS = (0.25,)
 
 
 def main(fast: bool = False) -> list[str]:
@@ -79,6 +168,14 @@ def main(fast: bool = False) -> list[str]:
         for ratio in RATIOS:
             loss = train_lm(method, ratio, steps=steps)
             out.append(f"table3_lm,{method},{ratio},{loss:.4f}")
+    # policy A/B arms at matched compute; uniform + loss_ema ride along
+    # as the in-run controls diff_tables' policy_check compares against
+    out.append("")
+    out.append("table,policy,ratio,eval_loss")
+    for policy in sorted(POLICIES):
+        for ratio in POLICY_RATIOS:
+            loss = train_lm_policy(policy, ratio, steps=steps)
+            out.append(f"table3_lm_policy,{policy},{ratio},{loss:.4f}")
     return out
 
 

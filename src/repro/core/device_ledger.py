@@ -31,7 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.history import (  # noqa: F401  (rehash re-exported: it is
-    FIB32,  # the migration half of this module's state_dict interchange)
+    AUX_CHANNELS,  # the migration half of this module's state_dict
+    FIB32,  # interchange)
+    N_AUX,
     HistoryConfig,
     LossHistory,
     rehash_state_dict,
@@ -56,9 +58,12 @@ class LedgerState:
     count: Array  # [capacity] i32
     last_seen: Array  # [capacity] i32, -1 = never
     owner: Array  # [capacity] i32, -1 = empty
+    sig: Array  # [capacity, N_AUX] f32 aux channels (history.AUX_CHANNELS)
 
     def tree_flatten(self):
-        return (self.ema, self.count, self.last_seen, self.owner), None
+        return (
+            self.ema, self.count, self.last_seen, self.owner, self.sig,
+        ), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -77,6 +82,7 @@ def init_state(cfg: HistoryConfig) -> LedgerState:
         count=jnp.zeros((n,), I32),
         last_seen=jnp.full((n,), -1, I32),
         owner=jnp.full((n,), -1, I32),
+        sig=jnp.zeros((n, N_AUX), F32),
     )
 
 
@@ -105,6 +111,7 @@ def record(
     losses: Array,
     step,
     valid: Optional[Array] = None,
+    signals: Optional[Array] = None,
 ) -> LedgerState:
     """Pure scatter-EMA write; semantics identical to ``LossHistory.record``.
 
@@ -114,6 +121,12 @@ def record(
     "record only the fresh per-example losses" at train time and for the
     routed sharded ledger, where each shard records only the ids homed to
     it out of a globally gathered batch).
+
+    ``signals`` (optional [B, N_AUX] f32, ``history.AUX_CHANNELS`` order)
+    EMAs the auxiliary channels under the same decay/ownership rules.
+    Without it, same-owner records leave the channels untouched (train-side
+    loss records must not erase the serve-side signal); evicting records
+    zero them (the new owner has no signal yet).
     """
     ids = jnp.asarray(ids).astype(I32)
     losses = jnp.asarray(losses).astype(F32)
@@ -123,6 +136,14 @@ def record(
     prev = jnp.where(fresh, losses, state.ema[slots])
     new_ema = d * prev + (1.0 - d) * losses
     new_count = jnp.where(fresh, 1, state.count[slots] + 1)
+    if signals is None:
+        new_sig = jnp.where(fresh[:, None], 0.0, state.sig[slots])
+    else:
+        signals = jnp.asarray(signals).astype(F32).reshape(
+            ids.shape[0], N_AUX
+        )
+        prev_sig = jnp.where(fresh[:, None], signals, state.sig[slots])
+        new_sig = d * prev_sig + (1.0 - d) * signals
     if valid is not None:
         # invalid items hash OOB: dropped by the scatter AND by the winner
         # computation (a masked write must not shadow a valid one)
@@ -137,6 +158,7 @@ def record(
             jnp.broadcast_to(step32, tgt.shape), mode="drop"
         ),
         owner=state.owner.at[tgt].set(ids, mode="drop"),
+        sig=state.sig.at[tgt].set(new_sig, mode="drop"),
     )
 
 
@@ -146,6 +168,23 @@ def lookup(state: LedgerState, ids: Array) -> tuple[Array, Array]:
     slots = slot_for_jnp(ids, state.capacity)
     seen = state.owner[slots] == ids
     return jnp.where(seen, state.ema[slots], 0.0).astype(F32), seen
+
+
+def lookup_signals(
+    state: LedgerState, ids: Array
+) -> tuple[Array, Array, Array]:
+    """Hash-probe read -> (ema [B], sig [B, N_AUX], seen [B]).
+
+    The multi-channel twin of ``lookup`` — one hash, one table visit for
+    every channel a selection policy might consume (feed the triple to
+    ``selection.policy_score``). Unseen rows are 0.
+    """
+    ids = jnp.asarray(ids).astype(I32)
+    slots = slot_for_jnp(ids, state.capacity)
+    seen = state.owner[slots] == ids
+    ema = jnp.where(seen, state.ema[slots], 0.0).astype(F32)
+    sig = jnp.where(seen[:, None], state.sig[slots], 0.0).astype(F32)
+    return ema, sig, seen
 
 
 def priority(cfg: HistoryConfig, state: LedgerState, ids: Array, step) -> Array:
@@ -160,6 +199,35 @@ def priority(cfg: HistoryConfig, state: LedgerState, ids: Array, step) -> Array:
     return jnp.where(seen, score, cfg.unseen_priority).astype(F32)
 
 
+def _sig_scatter(
+    cfg: HistoryConfig,
+    state: LedgerState,
+    ids: Array,
+    signals: Optional[Array],
+    valid: Optional[Array],
+) -> Array:
+    """The ``sig``-channel half of ``record`` in isolation — used when the
+    other four arrays go through the Pallas kernel (which predates the
+    signal store and stays a 4-array scatter); same slots, same ownership
+    and winner semantics, so the fused path stays bit-identical to ref."""
+    ids = jnp.asarray(ids).astype(I32)
+    slots = slot_for_jnp(ids, state.capacity)
+    fresh = state.owner[slots] != ids
+    if signals is None:
+        new_sig = jnp.where(fresh[:, None], 0.0, state.sig[slots])
+    else:
+        signals = jnp.asarray(signals).astype(F32).reshape(
+            ids.shape[0], N_AUX
+        )
+        prev_sig = jnp.where(fresh[:, None], signals, state.sig[slots])
+        new_sig = cfg.decay * prev_sig + (1.0 - cfg.decay) * signals
+    if valid is not None:
+        slots = jnp.where(jnp.asarray(valid, bool), slots, state.capacity)
+    keep = _winner_mask(slots, state.capacity)
+    tgt = jnp.where(keep, slots, state.capacity)
+    return state.sig.at[tgt].set(new_sig, mode="drop")
+
+
 def record_priority(
     cfg: HistoryConfig,
     state: LedgerState,
@@ -168,18 +236,22 @@ def record_priority(
     step,
     valid: Optional[Array] = None,
     impl: Optional[str] = None,
+    signals: Optional[Array] = None,
 ) -> tuple[LedgerState, Array]:
     """Fused write+score: record the batch, return post-record priorities.
 
-    Equivalent to ``record`` (honoring the optional ``valid`` write mask)
-    followed by ``priority`` over ALL ids at the same step, in one pass
-    (one hash, one table visit). ``impl`` selects the backend as in
-    ``repro.kernels.ops`` ("ref" = the jnp path below, "pallas"/"interpret"
-    = the fused Pallas kernel).
+    Equivalent to ``record`` (honoring the optional ``valid`` write mask
+    and the optional ``signals`` channels) followed by ``priority`` over
+    ALL ids at the same step, in one pass (one hash, one table visit).
+    ``impl`` selects the backend as in ``repro.kernels.ops`` ("ref" = the
+    jnp path below, "pallas"/"interpret" = the fused Pallas kernel; the
+    kernel covers the four scalar-channel arrays and the ``sig`` channels
+    ride the jnp scatter alongside it).
     """
     if impl not in (None, "ref"):
         from repro.kernels import ops as kops
 
+        sig = _sig_scatter(cfg, state, ids, signals, valid)
         ema, count, last_seen, owner, pri = kops.ledger_record_priority(
             state.ema,
             state.count,
@@ -194,8 +266,8 @@ def record_priority(
             valid=valid,
             impl=impl,
         )
-        return LedgerState(ema, count, last_seen, owner), pri
-    new = record(cfg, state, ids, losses, step, valid=valid)
+        return LedgerState(ema, count, last_seen, owner, sig), pri
+    new = record(cfg, state, ids, losses, step, valid=valid, signals=signals)
     return new, priority(cfg, new, ids, step)
 
 
@@ -208,16 +280,23 @@ def state_dict_of(state: LedgerState) -> dict[str, np.ndarray]:
         "count": np.asarray(state.count, np.int64),
         "last_seen": np.asarray(state.last_seen, np.int64),
         "owner": np.asarray(state.owner, np.int64),
+        "sig": np.asarray(state.sig, np.float32),
     }
 
 
 def state_from_dict(sd: dict[str, np.ndarray]) -> LedgerState:
-    """Load the host interchange format back into device arrays."""
+    """Load the host interchange format back into device arrays (dicts
+    written before the signal channels existed get sig = 0)."""
+    n = np.asarray(sd["ema"]).shape[0]
+    sig = np.asarray(
+        sd.get("sig", np.zeros((n, N_AUX))), np.float32
+    )
     return LedgerState(
         ema=jnp.asarray(np.asarray(sd["ema"], np.float32)),
         count=jnp.asarray(np.asarray(sd["count"]).astype(np.int32)),
         last_seen=jnp.asarray(np.asarray(sd["last_seen"]).astype(np.int32)),
         owner=jnp.asarray(np.asarray(sd["owner"]).astype(np.int32)),
+        sig=jnp.asarray(sig),
     )
 
 
@@ -234,22 +313,31 @@ class DeviceLedger:
         self.state = init_state(cfg)
         self._record = jax.jit(partial(record, cfg), donate_argnums=(0,))
         self._lookup = jax.jit(lookup)
+        self._lookup_signals = jax.jit(lookup_signals)
         self._priority = jax.jit(partial(priority, cfg))
 
     # -- LossHistory-compatible surface ------------------------------------
 
-    def record(self, ids, losses, step, valid=None) -> None:
-        self.state = self._record(self.state, ids, losses, step, valid)
+    def record(self, ids, losses, step, valid=None, signals=None) -> None:
+        self.state = self._record(
+            self.state, ids, losses, step, valid, signals
+        )
 
     def lookup(self, ids) -> tuple[Array, Array]:
         return self._lookup(self.state, ids)
 
+    def lookup_signals(self, ids) -> tuple[Array, Array, Array]:
+        return self._lookup_signals(self.state, ids)
+
     def priority(self, ids, step) -> Array:
         return self._priority(self.state, ids, step)
 
-    def record_priority(self, ids, losses, step, valid=None, impl=None) -> Array:
+    def record_priority(
+        self, ids, losses, step, valid=None, impl=None, signals=None
+    ) -> Array:
         self.state, pri = record_priority(
-            self.cfg, self.state, ids, losses, step, valid=valid, impl=impl
+            self.cfg, self.state, ids, losses, step, valid=valid, impl=impl,
+            signals=signals,
         )
         return pri
 

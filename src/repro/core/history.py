@@ -22,6 +22,16 @@ from typing import Optional
 
 import numpy as np
 
+# Auxiliary per-instance signal channels recorded alongside the loss EMA —
+# derived at serving time from the retained top-k+lse summary (predictive
+# entropy, top-1/top-2 margin; see repro.serving.recorder) and consumed by
+# the selection policies (repro.core.selection.POLICIES). The ledger's
+# ``sig`` array is [capacity, N_AUX] f32 in THIS order; it EMAs under the
+# same decay/ownership rules as the loss channel. Checkpoints written
+# before the channel existed load with sig = 0 (no serve-time signal yet).
+AUX_CHANNELS = ("entropy", "margin")
+N_AUX = len(AUX_CHANNELS)
+
 # 32-bit Fibonacci multiplier (2^32/phi). Addressing is deliberately 32-bit
 # so the device ledger — which runs under JAX x32 — computes the *same* slot
 # for the same id. Instance ids are keyed by their low 32 bits; ids must stay
@@ -64,9 +74,13 @@ def rehash_state_dict(
         "count": np.zeros((new_capacity,), np.int64),
         "last_seen": np.full((new_capacity,), -1, np.int64),
         "owner": np.full((new_capacity,), -1, np.int64),
+        "sig": np.zeros((new_capacity, N_AUX), np.float32),
     }
     if ids.size == 0:
         return out
+    sig_in = np.asarray(
+        sd.get("sig", np.zeros((owner.shape[0], N_AUX))), np.float32
+    )
     last_seen = np.asarray(sd["last_seen"], np.int64)[live]
     # numpy fancy assignment: the LAST duplicate index wins, so writing in
     # ascending last_seen order makes the most recent record survive.
@@ -76,6 +90,7 @@ def rehash_state_dict(
     out["count"][slots] = np.asarray(sd["count"], np.int64)[live][order]
     out["last_seen"][slots] = last_seen[order]
     out["owner"][slots] = ids[order]
+    out["sig"][slots] = sig_in[live][order]
     return out
 
 
@@ -98,6 +113,7 @@ class LossHistory:
         self.count = np.zeros((n,), np.int64)
         self.last_seen = np.full((n,), -1, np.int64)
         self.owner = np.full((n,), -1, np.int64)  # id owning the slot
+        self.sig = np.zeros((n, N_AUX), np.float32)  # AUX_CHANNELS order
 
     # -- addressing ---------------------------------------------------------
 
@@ -107,11 +123,24 @@ class LossHistory:
 
     # -- writes -------------------------------------------------------------
 
-    def record(self, ids: np.ndarray, losses: np.ndarray, step: int) -> None:
+    def record(
+        self,
+        ids: np.ndarray,
+        losses: np.ndarray,
+        step: int,
+        signals: Optional[np.ndarray] = None,
+    ) -> None:
         """Record per-instance losses observed at ``step`` (serving or train).
 
         Collisions evict: the newest instance owns the slot (production
         ledgers are lossy caches; eviction = falling back to unseen).
+
+        ``signals`` (optional [B, N_AUX] f32, ``AUX_CHANNELS`` order) EMAs
+        the auxiliary channels under the same decay and ownership rules as
+        the loss. Without it, a same-owner record leaves the channels
+        untouched (a train-side loss record must not erase the serve-side
+        signal) and an evicting record zeroes them (the new owner has no
+        signal yet).
         """
         ids = np.asarray(ids, np.int64)
         losses = np.asarray(losses, np.float32)
@@ -120,6 +149,14 @@ class LossHistory:
         d = self.cfg.decay
         prev = np.where(fresh, losses, self.ema[slots])
         self.ema[slots] = d * prev + (1.0 - d) * losses
+        if signals is None:
+            self.sig[slots] = np.where(
+                fresh[:, None], 0.0, self.sig[slots]
+            )
+        else:
+            signals = np.asarray(signals, np.float32).reshape(len(ids), N_AUX)
+            prev_sig = np.where(fresh[:, None], signals, self.sig[slots])
+            self.sig[slots] = d * prev_sig + (1.0 - d) * signals
         self.count[slots] = np.where(fresh, 1, self.count[slots] + 1)
         self.last_seen[slots] = step
         self.owner[slots] = ids
@@ -132,6 +169,21 @@ class LossHistory:
         slots = self._slot(ids)
         seen = self.owner[slots] == ids
         return np.where(seen, self.ema[slots], 0.0).astype(np.float32), seen
+
+    def lookup_signals(
+        self, ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Return (ema_loss [B], sig [B, N_AUX], seen_mask [B]).
+
+        ``sig`` columns follow ``AUX_CHANNELS``; unseen rows are 0 — feed
+        the triple to ``selection.policy_score`` for the cold fallback.
+        """
+        ids = np.asarray(ids, np.int64)
+        slots = self._slot(ids)
+        seen = self.owner[slots] == ids
+        ema = np.where(seen, self.ema[slots], 0.0).astype(np.float32)
+        sig = np.where(seen[:, None], self.sig[slots], 0.0).astype(np.float32)
+        return ema, sig, seen
 
     def priority(self, ids: np.ndarray, step: int) -> np.ndarray:
         """Training priority: unseen ≫ high-EMA-loss; staleness re-inflates.
@@ -166,6 +218,7 @@ class LossHistory:
             "count": self.count,
             "last_seen": self.last_seen,
             "owner": self.owner,
+            "sig": self.sig,
         }
 
     def load_state_dict(self, state: dict[str, np.ndarray]) -> None:
@@ -180,3 +233,9 @@ class LossHistory:
         self.count = np.asarray(state["count"], np.int64).copy()
         self.last_seen = np.asarray(state["last_seen"], np.int64).copy()
         self.owner = np.asarray(state["owner"], np.int64).copy()
+        # pre-signal-channel checkpoints: no serve-time signal recorded yet
+        sig = state.get("sig")
+        self.sig = (
+            np.zeros((self.cfg.capacity, N_AUX), np.float32)
+            if sig is None else np.asarray(sig, np.float32).copy()
+        )

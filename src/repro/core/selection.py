@@ -18,14 +18,20 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Callable, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
 _NEG_INF = -1e30
+# Gumbel-surviving "never pick unless nothing else is left" sentinel: far
+# below any log-weight (log(1e-30) ~ -69) yet small enough that adding a
+# Gumbel draw still changes the f32 value — with _NEG_INF the addition is
+# absorbed (-1e30 + g == -1e30) and top_k degenerates to indices 0..b-1.
+_SOFT_NEG = -1e4
 
 
 # ---------------------------------------------------------------------------
@@ -46,10 +52,16 @@ def select_prob(rng: Array, losses: Array, b: int, gamma: float = 1.0) -> Array:
     The paper draws independent Bernoullis (variable batch); for static shapes
     we draw exactly ``b`` without replacement via the Gumbel-top-k trick with
     weights p_i, which preserves the "probability proportional to loss" rule.
+
+    Zero-weight items (p == 0: zero/negative loss) get the ``_SOFT_NEG``
+    log-weight instead of -inf: they still lose to any positive-weight item,
+    but their Gumbel noise survives f32 addition — so a degenerate all-zero
+    batch reduces to a uniform draw instead of deterministically returning
+    indices 0..b-1.
     """
     losses = losses.astype(jnp.float32)
     p = jnp.tanh(gamma * jnp.maximum(losses, 0.0))
-    logits = jnp.where(p > 0, jnp.log(jnp.maximum(p, 1e-30)), _NEG_INF)
+    logits = jnp.where(p > 0, jnp.log(jnp.maximum(p, 1e-30)), _SOFT_NEG)
     g = jax.random.gumbel(rng, losses.shape, dtype=jnp.float32)
     return jax.lax.top_k(logits + g, b)[1].astype(jnp.int32)
 
@@ -60,11 +72,16 @@ def select_mink(
     """Min-k loss SGD [39]: the b lowest-loss examples.
 
     ``pool_size`` reproduces the appendix variant: restrict to a random pool
-    first, then take the lowest losses inside the pool.
+    first, then take the lowest losses inside the pool. The pool is clamped
+    to ``[b, n]`` — a pool smaller than the budget cannot yield ``b``
+    indices (shape break under jit, where ``b`` is static), and a pool of
+    the whole batch is just the plain min-k.
     """
     losses = losses.astype(jnp.float32)
-    if pool_size is not None and pool_size < losses.shape[0]:
-        pool = jax.random.permutation(rng, losses.shape[0])[:pool_size]
+    n = losses.shape[0]
+    if pool_size is not None and pool_size < n:
+        ps = max(int(pool_size), b)  # a pool can't be smaller than the pick
+        pool = jax.random.permutation(rng, n)[:ps]
         in_pool = losses[pool]
         order = jnp.argsort(in_pool)[:b]
         return pool[order].astype(jnp.int32)
@@ -88,14 +105,24 @@ def select_obftf_prox(rng: Array, losses: Array, b: int) -> Array:
     Faithful to the appendix: stride = n/(b+1); pick sorted[floor(i*stride)]
     for i = 1..b. Equal-quantile picks make the subset mean track the batch
     mean at O(n log n) cost.
+
+    The picks are computed in exact int64 arithmetic on the host (``n`` and
+    ``b`` are static) and constant-folded into the jaxpr: the former
+    ``jnp.floor(arange * stride)`` f32 formulation collapsed neighboring
+    picks once ``n`` crossed 2^24 (f32 cannot represent those integers, and
+    ``f32(n/(n+1)) == 1.0`` for n >= 2^25-1), returning DUPLICATE indices —
+    the effective subset shrank below ``b`` and the repeated rows'
+    gradients double-counted. ``floor(i*n/(b+1))`` for i = 1..b is provably
+    injective for b <= n in exact arithmetic (consecutive picks differ by
+    >= 1 when stride >= 1, and for b == n the picks are exactly 0..n-1).
     """
     del rng
     n = losses.shape[0]
     order = jnp.argsort(-losses.astype(jnp.float32))
-    stride = n / (b + 1)
-    pick = jnp.floor((jnp.arange(1, b + 1)) * stride).astype(jnp.int32)
-    pick = jnp.clip(pick, 0, n - 1)
-    return order[pick].astype(jnp.int32)
+    pick_np = np.arange(1, b + 1, dtype=np.int64) * n // (b + 1)
+    pick_np = np.minimum(pick_np, n - 1)
+    assert len(np.unique(pick_np)) == b, (n, b)  # trace-time invariant
+    return order[jnp.asarray(pick_np, jnp.int32)].astype(jnp.int32)
 
 
 def _obftf_target(rng: Array, losses: Array, b: int, noisy_target: bool) -> Array:
@@ -187,6 +214,9 @@ class SelectionConfig:
     # deterministic subset once training stabilizes and overfits it.
     noisy_target: bool = True
     mink_pool: Optional[int] = None  # 'mink' only: appendix random-pool variant
+    # WHICH recorded serve-time signal feeds the selector under --recycle
+    # (the method above is HOW the selector uses it); see POLICIES below.
+    policy: str = "loss_ema"
 
     def budget(self, n: int) -> int:
         b = int(max(1, round(self.ratio * n)))
@@ -210,6 +240,133 @@ def select(cfg: SelectionConfig, rng: Array, losses: Array, b: int) -> Array:
             rng, losses, b, swaps=cfg.swaps, noisy_target=cfg.noisy_target
         )
     raise NotImplementedError(cfg.method)
+
+
+# ---------------------------------------------------------------------------
+# Serve-time signal policies
+# ---------------------------------------------------------------------------
+#
+# A selection *method* (above) decides HOW indices are picked from a score
+# vector; a selection *policy* decides WHICH recorded serve-time signal that
+# score vector is. The ledger stores, per instance, a loss EMA plus the
+# auxiliary channels in ``history.AUX_CHANNELS`` (predictive entropy,
+# top-1/top-2 margin — derived from the retained top-k+lse summary at
+# serving time). A policy maps those channels to a non-negative pseudo-loss
+# where "higher = more worth a backward", which then flows through the
+# selectors exactly like a loss (``launch.train``/``RecycleFeed`` ship it
+# under the ``recorded_loss`` batch key).
+
+from repro.core.history import AUX_CHANNELS  # noqa: E402  (leaf import)
+
+
+@runtime_checkable
+class SelectionPolicy(Protocol):
+    """Protocol: a named, pure map from signal channels to scores [n]."""
+
+    name: str
+    channels: tuple[str, ...]
+
+    def score(self, signals: dict[str, Array]) -> Array: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class SignalPolicy:
+    """Concrete :class:`SelectionPolicy`: a pure function over channels.
+
+    ``signals`` maps channel name -> [n] f32 ("loss" is the ledger's EMA
+    channel; the rest are ``AUX_CHANNELS``). The returned score is
+    non-negative and jittable — policies run inside the fused train step.
+    """
+
+    name: str
+    channels: tuple[str, ...]  # channels consumed (() = constant score)
+    fn: Callable[[dict[str, Array]], Array]
+
+    def score(self, signals: dict[str, Array]) -> Array:
+        missing = [c for c in self.channels if c not in signals]
+        if missing:
+            raise KeyError(f"policy {self.name!r} missing channels {missing}")
+        return self.fn(signals).astype(jnp.float32)
+
+
+def _uniform_score(signals: dict[str, Array]) -> Array:
+    any_ch = next(iter(signals.values()))
+    return jnp.zeros(any_ch.shape, jnp.float32)
+
+
+POLICIES: dict[str, SignalPolicy] = {
+    # control arm: constant score — select_by_score degenerates to a uniform
+    # draw, and the cold-start fallback is skipped (a cold boost would bias
+    # the "uniform" arm toward unseen instances).
+    "uniform": SignalPolicy("uniform", (), _uniform_score),
+    # the pre-existing signal: recorded loss EMA (clamped; recorded LM
+    # losses are >= 0 already, regression residuals may not be).
+    "loss_ema": SignalPolicy(
+        "loss_ema", ("loss",),
+        lambda s: jnp.maximum(s["loss"], 0.0),
+    ),
+    # predictive entropy of the serving forward: high entropy = the model
+    # is unsure about the instance = worth a backward. Under topk retention
+    # this is the recorder's certain lower bound (see serving.recorder).
+    "entropy": SignalPolicy(
+        "entropy", ("entropy",),
+        lambda s: jnp.maximum(s["entropy"], 0.0),
+    ),
+    # top-1/top-2 margin -> softplus(-margin) = log(1 + e^{-margin}): the
+    # logistic loss of the top-1-vs-top-2 decision. Small margin (a close
+    # call) scores ~log 2, a confident call decays to 0. Positive by
+    # construction, so it composes with the same selectors as a loss.
+    "margin": SignalPolicy(
+        "margin", ("margin",),
+        lambda s: jax.nn.softplus(-s["margin"]),
+    ),
+}
+
+
+def get_policy(name: str) -> SignalPolicy:
+    if name not in POLICIES:
+        raise KeyError(f"unknown policy {name!r}; have {tuple(POLICIES)}")
+    return POLICIES[name]
+
+
+def policy_score(
+    policy: SelectionPolicy,
+    ema: Array,
+    sig: Array,
+    seen: Array,
+    cold: float,
+) -> Array:
+    """Ledger lookup -> selection score, with the cold-start fallback.
+
+    ``ema`` [n] is the ledger's loss channel, ``sig`` [n, len(AUX_CHANNELS)]
+    the auxiliary channels in ``AUX_CHANNELS`` order, ``seen`` [n] the hit
+    mask. Unseen instances score ``cold`` (must-see, like the trainer's
+    COLD_LOSS) — except under the uniform control policy, which by
+    definition ignores every signal including cold-start.
+    """
+    signals = {"loss": ema.astype(jnp.float32)}
+    for j, c in enumerate(AUX_CHANNELS):
+        signals[c] = sig[..., j].astype(jnp.float32)
+    s = policy.score(signals)
+    if policy.name == "uniform":
+        return s
+    return jnp.where(seen, s, jnp.float32(cold))
+
+
+def select_by_score(rng: Array, scores: Array, b: int) -> Array:
+    """Gumbel-top-k draw of ``b`` indices with probability ∝ score.
+
+    The A/B harness's shared selector: every policy feeds its score through
+    the SAME sampler, so accuracy differences are attributable to the
+    signal, not the mechanism. All-equal scores — including the uniform
+    policy's all-zero — degenerate to a uniform draw without replacement
+    (zero-score items carry the Gumbel-surviving ``_SOFT_NEG`` log-weight;
+    see ``select_prob``).
+    """
+    s = jnp.maximum(scores.astype(jnp.float32), 0.0)
+    w = jnp.where(s > 0, jnp.log(jnp.maximum(s, 1e-30)), _SOFT_NEG)
+    g = jax.random.gumbel(rng, s.shape, dtype=jnp.float32)
+    return jax.lax.top_k(w + g, b)[1].astype(jnp.int32)
 
 
 def subset_mean_residual(losses: Array, idx: Array) -> Array:

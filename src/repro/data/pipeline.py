@@ -132,6 +132,13 @@ class RecycleFeed:
     ``cold_loss`` is the optimistic-unseen fallback: instances the ledger
     has never scored get a huge recorded loss so selection treats them as
     must-see (cold-start behaves like uniform until the ledger warms).
+
+    ``policy`` names a ``repro.core.selection.POLICIES`` entry. The
+    default ``"loss_ema"`` reproduces the historical join (ship the loss
+    EMA itself); any other policy scores the ledger's multi-channel
+    signals (entropy, margin, ...) and ships the SCORE under the same
+    ``recorded_loss`` key — downstream selection is policy-agnostic, it
+    just selects on whatever pseudo-loss the feed shipped.
     """
 
     LEDGERS = ("host", "engine", "device")
@@ -142,7 +149,10 @@ class RecycleFeed:
         history=None,
         ledger: str = "host",
         cold_loss: float = 1e3,
+        policy: str = "loss_ema",
     ):
+        from repro.core.selection import get_policy
+
         assert ledger in self.LEDGERS, ledger
         if ledger != "device":
             assert history is not None and hasattr(history, "lookup"), \
@@ -151,15 +161,31 @@ class RecycleFeed:
         self.history = history
         self.ledger = ledger
         self.cold_loss = cold_loss
+        self.policy = get_policy(policy)  # validate the name eagerly
 
     def batch(self, step: int) -> dict[str, np.ndarray]:
         raw = self.stream.batch(step)
         if self.ledger in ("host", "engine"):
-            ema, seen = self.history.lookup(raw["instance_id"])
-            ema, seen = np.asarray(ema), np.asarray(seen)
-            raw["recorded_loss"] = np.where(
-                seen, ema, self.cold_loss
-            ).astype(np.float32)
+            if self.policy.name == "loss_ema":
+                ema, seen = self.history.lookup(raw["instance_id"])
+                ema, seen = np.asarray(ema), np.asarray(seen)
+                raw["recorded_loss"] = np.where(
+                    seen, ema, self.cold_loss
+                ).astype(np.float32)
+            else:
+                from repro.core.selection import policy_score
+
+                ema, sig, seen = self.history.lookup_signals(
+                    raw["instance_id"]
+                )
+                ema, sig = np.asarray(ema), np.asarray(sig)
+                seen = np.asarray(seen)
+                raw["recorded_loss"] = np.asarray(
+                    policy_score(
+                        self.policy, ema, sig, seen, self.cold_loss
+                    ),
+                    np.float32,
+                )
             # observability: fraction of the batch the ledger could answer
             raw["ledger_hit_rate"] = float(seen.mean())
         return raw

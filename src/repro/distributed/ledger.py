@@ -47,6 +47,7 @@ from repro.core.device_ledger import (
     LedgerState,
     init_state,
     lookup,
+    lookup_signals,
     priority,
     record,
     record_priority,
@@ -85,10 +86,15 @@ class ShardedLedgerOps:
             n *= self.mesh.shape[a]
         return n
 
+    def _state_spec(self):
+        # every table array shards along its leading (slot) axis — the 2-D
+        # ``sig`` [slots, N_AUX] included (P over axis 0 only)
+        dp = P(tuple(self.dp_axes))
+        return LedgerState(dp, dp, dp, dp, dp)
+
     def _wrap(self, fn, n_batch_args, out_specs):
         dp = P(tuple(self.dp_axes))
-        state_spec = LedgerState(dp, dp, dp, dp)
-        in_specs = (state_spec,) + (dp,) * n_batch_args + (P(),)
+        in_specs = (self._state_spec(),) + (dp,) * n_batch_args + (P(),)
         return shard_map(
             fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs
         )
@@ -112,13 +118,16 @@ class ShardedLedgerOps:
     def _return_route(self, values: jax.Array, mine: jax.Array, b: int):
         """Send each answer back to the shard that asked: exactly one shard
         has ``mine`` set per item, so a masked psum is the inverse
-        exchange; then slice this shard's segment of the global batch."""
+        exchange; then slice this shard's segment of the global batch.
+        ``values`` may carry trailing channel axes ([B] or [B, N_AUX]);
+        ``mine`` masks the leading batch axis."""
         zero = jnp.zeros((), values.dtype)
+        mask = mine.reshape(mine.shape + (1,) * (values.ndim - 1))
         total = jax.lax.psum(
-            jnp.where(mine, values, zero), tuple(self.dp_axes)
+            jnp.where(mask, values, zero), tuple(self.dp_axes)
         )
         start = linear_axis_index(self.dp_axes) * b
-        return jax.lax.dynamic_slice(total, (start,), (b,))
+        return jax.lax.dynamic_slice_in_dim(total, start, b, axis=0)
 
     # -- ops ----------------------------------------------------------------
 
@@ -130,21 +139,33 @@ class ShardedLedgerOps:
         )
 
     def record(
-        self, state: LedgerState, ids, losses, step, valid=None
+        self, state: LedgerState, ids, losses, step, valid=None,
+        signals=None,
     ) -> LedgerState:
-        dp = P(tuple(self.dp_axes))
-        state_spec = LedgerState(dp, dp, dp, dp)
+        state_spec = self._state_spec()
         if valid is None:
             valid = jnp.ones(jnp.asarray(ids).shape, bool)
+        if signals is None:
 
-        def local(st, i, l, v, s):
+            def local(st, i, l, v, s):
+                if self.route:
+                    i, l, v, mine = self._exchange(i, l, v)
+                    v = v & mine
+                return record(self.local_cfg, st, i, l, s, valid=v)
+
+            fn = self._wrap(local, 3, state_spec)
+            return fn(state, ids, losses, valid, jnp.asarray(step, I32))
+
+        def local_sig(st, i, l, v, sg, s):
             if self.route:
-                i, l, v, mine = self._exchange(i, l, v)
+                i, l, v, sg, mine = self._exchange(i, l, v, sg)
                 v = v & mine
-            return record(self.local_cfg, st, i, l, s, valid=v)
+            return record(self.local_cfg, st, i, l, s, valid=v, signals=sg)
 
-        fn = self._wrap(local, 3, state_spec)
-        return fn(state, ids, losses, valid, jnp.asarray(step, I32))
+        fn = self._wrap(local_sig, 4, state_spec)
+        return fn(
+            state, ids, losses, valid, signals, jnp.asarray(step, I32)
+        )
 
     def lookup(self, state: LedgerState, ids):
         dp = P(tuple(self.dp_axes))
@@ -161,6 +182,26 @@ class ShardedLedgerOps:
             )
 
         fn = self._wrap(local, 1, (dp, dp))
+        return fn(state, ids, jnp.zeros((), I32))
+
+    def lookup_signals(self, state: LedgerState, ids):
+        """Multi-channel probe -> (ema [B], sig [B, N_AUX], seen [B]);
+        routed mode answers from each id's home shard like ``lookup``."""
+        dp = P(tuple(self.dp_axes))
+
+        def local(st, i, s):
+            if not self.route:
+                return lookup_signals(st, i)
+            b = i.shape[0]
+            i_all, mine = self._exchange(i)
+            ema, sig, seen = lookup_signals(st, i_all)
+            return (
+                self._return_route(ema, mine, b),
+                self._return_route(sig, mine, b),
+                self._return_route(seen.astype(I32), mine, b) > 0,
+            )
+
+        fn = self._wrap(local, 1, (dp, dp, dp))
         return fn(state, ids, jnp.zeros((), I32))
 
     def priority(self, state: LedgerState, ids, step):
@@ -185,27 +226,48 @@ class ShardedLedgerOps:
         step,
         valid=None,
         impl: Optional[str] = None,
+        signals=None,
     ):
         dp = P(tuple(self.dp_axes))
-        state_spec = LedgerState(dp, dp, dp, dp)
+        state_spec = self._state_spec()
         if valid is None:
             valid = jnp.ones(jnp.asarray(ids).shape, bool)
+        if signals is None:
 
-        def local(st, i, l, v, s):
+            def local(st, i, l, v, s):
+                if not self.route:
+                    return record_priority(
+                        self.local_cfg, st, i, l, s, valid=v, impl=impl
+                    )
+                b = i.shape[0]
+                i_all, l_all, v_all, mine = self._exchange(i, l, v)
+                st2, pri = record_priority(
+                    self.local_cfg, st, i_all, l_all, s,
+                    valid=v_all & mine, impl=impl,
+                )
+                return st2, self._return_route(pri, mine, b)
+
+            fn = self._wrap(local, 3, (state_spec, dp))
+            return fn(state, ids, losses, valid, jnp.asarray(step, I32))
+
+        def local_sig(st, i, l, v, sg, s):
             if not self.route:
                 return record_priority(
-                    self.local_cfg, st, i, l, s, valid=v, impl=impl
+                    self.local_cfg, st, i, l, s, valid=v, impl=impl,
+                    signals=sg,
                 )
             b = i.shape[0]
-            i_all, l_all, v_all, mine = self._exchange(i, l, v)
+            i_all, l_all, v_all, sg_all, mine = self._exchange(i, l, v, sg)
             st2, pri = record_priority(
                 self.local_cfg, st, i_all, l_all, s,
-                valid=v_all & mine, impl=impl,
+                valid=v_all & mine, impl=impl, signals=sg_all,
             )
             return st2, self._return_route(pri, mine, b)
 
-        fn = self._wrap(local, 3, (state_spec, dp))
-        return fn(state, ids, losses, valid, jnp.asarray(step, I32))
+        fn = self._wrap(local_sig, 4, (state_spec, dp))
+        return fn(
+            state, ids, losses, valid, signals, jnp.asarray(step, I32)
+        )
 
     # -- host interchange / migration ---------------------------------------
 
@@ -327,8 +389,11 @@ def merge_shard_state_dicts(
     collide at the same global slot — the most recent one wins, matching
     the ledger's lossy-cache eviction semantics.
     """
+    keys = ("ema", "count", "last_seen", "owner")
+    if all("sig" in sd for sd in sds):  # pre-signal-channel dicts merge too
+        keys += ("sig",)
     concat = {
         k: np.concatenate([np.asarray(sd[k]) for sd in sds])
-        for k in ("ema", "count", "last_seen", "owner")
+        for k in keys
     }
     return rehash_state_dict(concat, capacity or concat["owner"].shape[0])

@@ -40,7 +40,12 @@ from repro.checkpoint import CheckpointManager
 from repro.core import device_ledger as dledger
 from repro.core.history import HistoryConfig, LossHistory
 from repro.core.obftf import OBFTFConfig, make_train_step
-from repro.core.selection import SelectionConfig
+from repro.core.selection import (
+    POLICIES,
+    SelectionConfig,
+    get_policy,
+    policy_score,
+)
 from repro.data import DataConfig, Prefetcher, RecycleFeed, SyntheticLMStream
 from repro.distributed.ledger import sharded_ledger_ops
 from repro.distributed.sharding import DEFAULT_RULES, use_rules
@@ -86,6 +91,12 @@ def main(argv=None) -> int:
     ap.add_argument("--ratio", type=float, default=0.25)
     ap.add_argument("--recycle", action="store_true",
                     help="reuse recorded losses as the selection signal")
+    ap.add_argument("--policy", default="loss_ema",
+                    choices=sorted(POLICIES),
+                    help="selection policy scoring the recycled ledger "
+                         "signals (loss EMA, serve-time entropy/margin, "
+                         "or the uniform control); only meaningful with "
+                         "--recycle")
     ap.add_argument("--ledger", default="host", choices=("host", "device"),
                     help="recycle ledger placement: host numpy store with a "
                          "per-step round-trip, or device-resident (lookup + "
@@ -212,7 +223,7 @@ def main(argv=None) -> int:
                   f"({int((history.owner >= 0).sum())} live slots)")
         if args.recycle:
             feed = RecycleFeed(stream, history, ledger="host",
-                               cold_loss=COLD_LOSS)
+                               cold_loss=COLD_LOSS, policy=args.policy)
     if resume_ledger is not None:
         # the checkpoint's ledger wins over --ledger-in: it is the recycle
         # signal as of the resumed step, not the (older) serve-time export
@@ -247,6 +258,10 @@ def main(argv=None) -> int:
 
     if use_device_ledger:
         led_lookup = led_ops.lookup if led_ops else dledger.lookup
+        led_lookup_sig = (
+            led_ops.lookup_signals if led_ops else dledger.lookup_signals
+        )
+        policy = get_policy(args.policy)
         if led_ops:
             led_record = led_ops.record
         else:
@@ -256,10 +271,19 @@ def main(argv=None) -> int:
 
         def step_with_ledger(state, lstate, batch, rng):
             """Ledger probe -> OBFTF step -> ledger write, one jit, zero
-            host transfers (the whole point of the device ledger)."""
+            host transfers (the whole point of the device ledger).
+
+            Non-default policies score the ledger's multi-channel
+            signals in-jit (``policy_score``) and feed the score as the
+            recycled pseudo-loss; the historical loss_ema default keeps
+            its exact raw-EMA join."""
             ids = batch["instance_id"]
-            ema, seen = led_lookup(lstate, ids)
-            rec = jnp.where(seen, ema, COLD_LOSS).astype(jnp.float32)
+            if policy.name == "loss_ema":
+                ema, seen = led_lookup(lstate, ids)
+                rec = jnp.where(seen, ema, COLD_LOSS).astype(jnp.float32)
+            else:
+                ema, sig, seen = led_lookup_sig(lstate, ids)
+                rec = policy_score(policy, ema, sig, seen, COLD_LOSS)
             state, metrics = step_fn(state, dict(batch, recorded_loss=rec),
                                      rng)
             # TRUE per-example losses from the step's forwards, written
@@ -371,6 +395,7 @@ def main(argv=None) -> int:
             "method": args.method,
             "ratio": args.ratio,
             "recycle": bool(args.recycle),
+            "policy": args.policy,
             "ledger": args.ledger,
             "stragglers": watchdog.flagged,
             "ledger_hits_first": hits_log[0] if hits_log else None,

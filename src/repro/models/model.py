@@ -257,6 +257,38 @@ def per_example_loss(
     return jnp.sum(ce, axis=-1) / denom.astype(F32), aux
 
 
+def per_example_signals(
+    params: dict, cfg: ModelConfig, batch: dict[str, Array]
+) -> tuple[Array, dict[str, Array], Array]:
+    """-> (per-example CE [B], {"entropy", "margin"} [B], moe aux).
+
+    The train-side twin of the serving recorder's signal derivation
+    (``serving.recorder.full_signals``): per-token predictive entropy
+    ``lse - sum(softmax * logits)`` and top-1/top-2 logit margin,
+    masked-averaged over label positions. Benches use it to feed the
+    signal ledger from training forwards when no serving fleet exists —
+    same ``AUX_CHANNELS`` semantics, exact (dense-logit) values.
+    """
+    prefix = batch.get("prefix_embed")
+    hidden, aux = forward_hidden(params, cfg, batch["tokens"], prefix)
+    if prefix is not None:
+        hidden = hidden[:, prefix.shape[1] :, :]
+    logits = unembed(params, cfg, hidden).astype(F32)
+    labels = batch["labels"]
+    ce = per_token_loss(logits, labels)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ent = lse - jnp.sum(jax.nn.softmax(logits, axis=-1) * logits, axis=-1)
+    top2 = jax.lax.top_k(logits, 2)[0]
+    mar = top2[..., 0] - top2[..., 1]
+    mask = (labels >= 0).astype(F32)
+    denom = jnp.maximum(mask.sum(axis=-1), 1.0)
+    signals = {
+        "entropy": jnp.sum(ent * mask, axis=-1) / denom,
+        "margin": jnp.sum(mar * mask, axis=-1) / denom,
+    }
+    return jnp.sum(ce, axis=-1) / denom, signals, aux
+
+
 def loss_fn(cfg: ModelConfig):
     """`per_example_loss_fn(params, batch, rng) -> [B]` for the OBFTF step.
 

@@ -303,6 +303,8 @@ class Engine:
             "finished": occupied & (gen_idx >= estate.max_new),
             "pending": info["pending"],
             "loss": info["loss"],
+            "entropy": info["entropy"],
+            "margin": info["margin"],
             "loss_valid": info["valid"],
             "topk_miss": info["miss"],
             "n_recorded": rstate.n_recorded,
@@ -487,6 +489,9 @@ class Engine:
             self.recorder.record_host(
                 metrics["inst"], metrics["loss"], metrics["loss_valid"],
                 self.steps_run + 1,
+                signals=np.stack(
+                    [metrics["entropy"], metrics["margin"]], axis=-1
+                ),
             )
         self._last_metrics = metrics
         self.steps_run += 1
@@ -603,6 +608,9 @@ class EngineLedgerHandle:
 
     def lookup(self, ids):
         return self._refresh().lookup(ids)
+
+    def lookup_signals(self, ids):
+        return self._refresh().lookup_signals(ids)
 
     def priority(self, ids, step):
         return self._refresh().priority(ids, step)

@@ -89,6 +89,52 @@ def topk_score(
     return lse.astype(F32) - jnp.where(hit, picked, tail), hit
 
 
+def topk_signals(vals: Array, lse: Array) -> tuple[Array, Array]:
+    """Serve-time signals from a (top-k values, exact lse) summary.
+
+    ``vals`` [..., K] (sorted descending by the top-k kernel), ``lse``
+    [...]. Returns ``(entropy, margin)``:
+
+    * ``entropy`` — a certain LOWER bound of the predictive entropy
+      ``sum_k p_k (lse - v_k) + p_tail (lse - min(topk))`` with
+      ``p_k = exp(v_k - lse)``: the retained terms are exact and every
+      tail token's surprisal ``lse - logit`` is >= the tail floor
+      ``lse - min(topk)``, so the truncation only under-counts. Exact
+      when the tail mass is zero (K = V).
+    * ``margin`` — top-1/top-2 logit gap ``vals[..., 0] - vals[..., 1]``
+      (0 when K < 2: a single retained logit carries no gap).
+
+    Both are derived from data the recorder already retains — the
+    signals are free at serving time (no extra forward work).
+    """
+    v = vals.astype(F32)
+    lse = lse.astype(F32)
+    p = jnp.exp(v - lse[..., None])  # [..., K]
+    p_tail = jnp.maximum(1.0 - p.sum(axis=-1), 0.0)
+    entropy = jnp.sum(p * (lse[..., None] - v), axis=-1) + p_tail * (
+        lse - jnp.min(v, axis=-1)
+    )
+    if v.shape[-1] < 2:
+        margin = jnp.zeros(lse.shape, F32)
+    else:
+        margin = v[..., 0] - v[..., 1]
+    return entropy, margin
+
+
+def full_signals(logits: Array, lse: Array) -> tuple[Array, Array]:
+    """Exact (entropy, margin) from dense retained logits [..., V]."""
+    x = logits.astype(F32)
+    lse = lse.astype(F32)
+    p = jax.nn.softmax(x, axis=-1)
+    entropy = lse - jnp.sum(p * x, axis=-1)
+    if x.shape[-1] < 2:
+        margin = jnp.zeros(lse.shape, F32)
+    else:
+        top2 = jax.lax.top_k(x, 2)[0]
+        margin = top2[..., 0] - top2[..., 1]
+    return entropy, margin
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class RecorderState:
@@ -318,12 +364,21 @@ class OutcomeRecorder:
     ) -> tuple[RecorderState, dict[str, Array]]:
         """Score the oldest labeled-but-unscored position of every slot.
 
-        Returns the updated state and {loss, valid, pending, miss}:
-        per-slot loss of the scored position (``valid`` marks slots that
-        recorded one; ``miss`` the valid records clamped to the top-k
-        tail floor — always all-False under retention="full") and
-        ``pending`` — whether labeled-unscored positions remain (the
-        drain signal eviction waits on).
+        Returns the updated state and {loss, entropy, margin, valid,
+        pending, miss}: per-slot loss of the scored position (``valid``
+        marks slots that recorded one; ``miss`` the valid records
+        clamped to the top-k tail floor — always all-False under
+        retention="full") and ``pending`` — whether labeled-unscored
+        positions remain (the drain signal eviction waits on).
+
+        ``entropy``/``margin`` are the serve-time signal channels
+        (``AUX_CHANNELS`` order) derived from the retained summary of
+        the scored position — exact under retention="full", the
+        certain entropy lower bound under "topk" (see
+        :func:`topk_signals`). They ride the same ledger record as the
+        loss: the whole derivation traces inside the engine's fused
+        step, so nothing touches the host even under
+        ``jax.transfer_guard("disallow")``.
         """
         s, g = self.slots, self.max_gen
         bidx = jnp.arange(s)
@@ -348,6 +403,7 @@ class OutcomeRecorder:
             )[:, 0]
             loss = lse - picked
             hit = jnp.ones((s,), bool)
+            entropy, margin = full_signals(sel_logits, lse)
         else:
             sel_vals = jnp.take_along_axis(
                 state.topk_vals, pos[:, None, None], axis=1
@@ -359,6 +415,8 @@ class OutcomeRecorder:
                 :, 0
             ]
             loss, hit = topk_score(sel_vals, sel_idx, sel_lse, sel_label)
+            entropy, margin = topk_signals(sel_vals, sel_lse)
+        signals = jnp.stack([entropy, margin], axis=-1)  # AUX_CHANNELS
         valid = has & (inst >= 0)
         miss = valid & ~hit
         scored = state.scored.at[
@@ -367,10 +425,13 @@ class OutcomeRecorder:
         ledger = state.ledger
         if ledger is not None:
             if self.ops is not None:
-                ledger = self.ops.record(ledger, inst, loss, step, valid)
+                ledger = self.ops.record(
+                    ledger, inst, loss, step, valid, signals=signals
+                )
             else:
                 ledger = dledger.record(
-                    self.cfg, ledger, inst, loss, step, valid=valid
+                    self.cfg, ledger, inst, loss, step, valid=valid,
+                    signals=signals,
                 )
         new = dataclasses.replace(
             state,
@@ -383,18 +444,27 @@ class OutcomeRecorder:
             (new.labels >= 0) & ~new.scored & (giota < produced[:, None])
         ).any(axis=1)
         return new, {
-            "loss": loss, "valid": valid, "pending": pending, "miss": miss,
+            "loss": loss, "entropy": entropy, "margin": margin,
+            "valid": valid, "pending": pending, "miss": miss,
         }
 
     # -- host interchange ----------------------------------------------------
 
-    def record_host(self, ids, losses, valid, step: int) -> None:
-        """The ledger="host" record half (driver-side, numpy)."""
+    def record_host(
+        self, ids, losses, valid, step: int, signals=None
+    ) -> None:
+        """The ledger="host" record half (driver-side, numpy).
+
+        ``signals`` is the optional [S, N_AUX] stack in ``AUX_CHANNELS``
+        order from :meth:`score_one`'s info dict.
+        """
         assert self.host_history is not None
         v = np.asarray(valid, bool)
         if v.any():
             self.host_history.record(
-                np.asarray(ids, np.int64)[v], np.asarray(losses)[v], step
+                np.asarray(ids, np.int64)[v], np.asarray(losses)[v], step,
+                signals=None if signals is None
+                else np.asarray(signals, np.float32)[v],
             )
 
     def state_dict(self, state: RecorderState) -> dict[str, np.ndarray]:

@@ -1,6 +1,6 @@
 """Nightly benchmark table differ: keying, direction, fail-soft."""
 
-from benchmarks.diff_tables import diff, main, parse_tables
+from benchmarks.diff_tables import diff, main, parse_tables, policy_check
 
 HDR_SEL = "table,method,n,us_per_call,median_residual"
 HDR_SRV = "table,path,slots,gen,us_per_step,tok_per_s"
@@ -98,3 +98,79 @@ def test_fail_soft_without_previous_file(tmp_path, capsys):
     curr.write_text(HDR_SEL + "\nselection,obftf,128,10.0,0.1\n")
     assert main([str(tmp_path / "absent.txt"), str(curr)]) == 0
     assert "nothing to diff" in capsys.readouterr().out
+
+
+# -- within-run policy A/B verdicts ------------------------------------------
+
+HDR_POL = "table,policy,ratio,test_accuracy"
+
+
+def test_policy_check_flags_policy_behind_both_controls():
+    """Up-good metric: a policy below uniform OR loss_ema warns; one ahead
+    of both stays quiet; the uniform control is never judged vs loss_ema."""
+    curr = "\n".join([
+        HDR_POL,
+        "fig2_mnist_policy,uniform,0.25,0.80",
+        "fig2_mnist_policy,loss_ema,0.25,0.85",
+        "fig2_mnist_policy,entropy,0.25,0.70",   # behind both
+        "fig2_mnist_policy,margin,0.25,0.90",    # ahead of both
+    ])
+    warns = policy_check(curr, threshold=0.02)
+    assert any("entropy behind uniform" in w for w in warns)
+    assert any("entropy behind loss_ema" in w for w in warns)
+    assert not any("margin" in w for w in warns)
+    assert not any("uniform behind" in w for w in warns)
+
+
+def test_policy_check_down_good_metric_direction():
+    """eval_loss (no up-good fragment) regresses UP: a higher loss than
+    the control warns, a lower one does not."""
+    hdr = "table,policy,ratio,eval_loss"
+    curr = "\n".join([
+        hdr,
+        "table3_lm_policy,uniform,0.25,5.60",
+        "table3_lm_policy,entropy,0.25,6.00",   # worse (higher) loss
+        "table3_lm_policy,margin,0.25,5.40",    # better
+    ])
+    warns = policy_check(curr, threshold=0.02)
+    assert any("entropy behind uniform" in w and "eval_loss" in w
+               for w in warns)
+    assert not any("margin" in w for w in warns)
+
+
+def test_policy_check_groups_by_remaining_key():
+    """Policies are only compared within the same (table, ratio) group —
+    a policy losing at one ratio must not be masked by winning at another,
+    and cross-table rows never mix."""
+    curr = "\n".join([
+        HDR_POL,
+        "fig2_mnist_policy,uniform,0.1,0.60",
+        "fig2_mnist_policy,entropy,0.1,0.50",   # behind at 0.1
+        "fig2_mnist_policy,uniform,0.25,0.80",
+        "fig2_mnist_policy,entropy,0.25,0.95",  # ahead at 0.25
+    ])
+    warns = policy_check(curr, threshold=0.02)
+    assert any("ratio=0.1" in w and "entropy" in w for w in warns)
+    assert not any("ratio=0.25" in w for w in warns)
+
+
+def test_policy_check_tolerates_missing_controls_and_plain_rows():
+    """No policy axis, or a group without controls: nothing to say."""
+    assert policy_check(HDR_SEL + "\nselection,obftf,128,10.0,0.1",
+                        threshold=0.02) == []
+    orphan = "\n".join([HDR_POL, "fig2_mnist_policy,entropy,0.25,0.1"])
+    assert policy_check(orphan, threshold=0.02) == []
+
+
+def test_policy_check_runs_from_main_without_prev(tmp_path, capsys):
+    """The nightly contract: the A/B verdict fires on the very first run
+    (no previous artifact) and the exit stays fail-soft 0."""
+    curr = tmp_path / "curr.txt"
+    curr.write_text("\n".join([
+        HDR_POL,
+        "fig2_mnist_policy,uniform,0.25,0.80",
+        "fig2_mnist_policy,entropy,0.25,0.40",
+    ]) + "\n")
+    assert main([str(tmp_path / "absent.txt"), str(curr)]) == 0
+    out = capsys.readouterr().out
+    assert "POLICY entropy behind uniform" in out

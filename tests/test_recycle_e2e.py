@@ -55,7 +55,7 @@ def test_serve_then_recycle_train(tmp_path, ledger):
 
     # the saved state is the shared interchange format: both ledgers load it
     state = dict(np.load(ledger_npz))
-    assert set(state) == {"ema", "count", "last_seen", "owner"}
+    assert set(state) == {"ema", "count", "last_seen", "owner", "sig"}
     # one slot per served request (the engine default streams 3 waves of
     # --batch requests), every generated position recorded into it
     assert int((state["owner"] >= 0).sum()) == 24

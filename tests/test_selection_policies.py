@@ -1,0 +1,257 @@
+"""Selector invariants + the signal-policy layer.
+
+The three regression tests at the top were written against the PRE-FIX
+selectors and failed there (duplicate prox picks past 2^24, deterministic
+0..b-1 picks on degenerate batches, a shape break when the mink pool was
+smaller than the budget); they pin the fixes. The property test asserts
+the universal selector contract — every ``METHODS`` entry returns exactly
+``b`` unique in-range int32 indices — across edge shapes and pathological
+losses.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.history import AUX_CHANNELS, N_AUX
+from repro.core.selection import (
+    METHODS,
+    POLICIES,
+    SelectionConfig,
+    SelectionPolicy,
+    get_policy,
+    policy_score,
+    select,
+    select_by_score,
+    select_mink,
+    select_obftf_prox,
+    select_prob,
+)
+
+RNG = jax.random.key(0)
+
+
+def _assert_valid(idx, n, b):
+    idx = np.asarray(idx)
+    assert idx.shape == (b,), idx.shape
+    assert idx.dtype == np.int32, idx.dtype
+    assert len(np.unique(idx)) == b, f"duplicate picks: {np.sort(idx)}"
+    assert (idx >= 0).all() and (idx < n).all(), idx
+
+
+# ---------------------------------------------------------------------------
+# pre-fix-failing regressions
+# ---------------------------------------------------------------------------
+
+
+def test_prox_unique_past_f32_integer_range():
+    """n = b = 2^24 + 1: the smallest batch where the old f32
+    ``floor(arange * stride)`` pick formula collapses neighboring picks
+    into duplicates (f32 cannot represent integers past 2^24). The fixed
+    exact-int picks must cover all b indices."""
+    n = b = (1 << 24) + 1
+    losses = jnp.zeros((n,), jnp.float32)  # sort order irrelevant here
+    idx = np.asarray(select_obftf_prox(RNG, losses, b))
+    assert len(np.unique(idx)) == b
+    assert idx.dtype == np.int32
+
+
+def test_prox_b_equals_n_is_identity_set():
+    # ratio=1.0 via SelectionConfig.budget — the ISSUE's stride < 1 case
+    n = 37
+    b = SelectionConfig(method="obftf_prox", ratio=1.0).budget(n)
+    assert b == n
+    idx = select_obftf_prox(RNG, _rand_losses(n), b)
+    assert sorted(np.asarray(idx).tolist()) == list(range(n))
+
+
+def test_prob_degenerate_batch_is_uniform_not_prefix():
+    """All-zero losses: every selection weight vanishes. The old code sent
+    all logits to -1e30, the Gumbel noise was absorbed in f32, and top_k
+    returned 0..b-1 deterministically. Fixed: a pure Gumbel (uniform)
+    draw — different keys give different picks, coverage is full."""
+    n, b = 32, 4
+    losses = jnp.zeros((n,))
+    picks = [tuple(np.asarray(select_prob(jax.random.key(i), losses, b)))
+             for i in range(20)]
+    assert len(set(picks)) > 1, "degenerate batch still deterministic"
+    covered = {i for p in picks for i in p}
+    assert max(covered) >= b, "picks never left the 0..b-1 prefix"
+    for p in picks:
+        _assert_valid(np.asarray(p, np.int32), n, b)
+
+
+def test_prob_degenerate_matches_gumbel_oracle():
+    """Oracle parity: with every weight at the sentinel, the draw must be
+    EXACTLY the Gumbel-top-k order of the same key."""
+    n, b = 16, 5
+    key = jax.random.key(7)
+    got = select_prob(key, jnp.zeros((n,)), b)
+    g = jax.random.gumbel(key, (n,), dtype=jnp.float32)
+    want = jax.lax.top_k(g, b)[1].astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mink_pool_smaller_than_budget():
+    """pool_size < b used to slice fewer than b indices (a shape break
+    under jit where b is static). The pool is clamped to b now."""
+    n, b = 16, 4
+    losses = _rand_losses(n)
+    idx = jax.jit(
+        lambda r, l: select_mink(r, l, b, pool_size=2)
+    )(RNG, losses)
+    _assert_valid(idx, n, b)
+
+
+def test_mink_pool_clamped_is_exact_min_of_pool():
+    # oracle parity for the clamped path: picks = lowest-b inside the pool
+    n, b, ps = 32, 4, 8
+    losses = _rand_losses(n)
+    idx = np.asarray(select_mink(RNG, losses, b, pool_size=ps))
+    pool = np.asarray(jax.random.permutation(RNG, n)[:ps])
+    want = pool[np.argsort(np.asarray(losses)[pool], kind="stable")[:b]]
+    np.testing.assert_array_equal(idx, want)
+
+
+# ---------------------------------------------------------------------------
+# the universal selector contract
+# ---------------------------------------------------------------------------
+
+
+def _rand_losses(n, seed=1):
+    return jax.random.normal(jax.random.key(seed), (n,)) * 3 + 5
+
+
+def _pathological(kind: str, n: int):
+    if kind == "zeros":
+        return jnp.zeros((n,))
+    if kind == "constant":
+        return jnp.full((n,), 2.5)
+    if kind == "inf":
+        base = np.asarray(_rand_losses(n)).copy()
+        base[:: max(n // 3, 1)] = np.inf
+        return jnp.asarray(base)
+    raise KeyError(kind)
+
+
+EDGE_SHAPES = [(1, 1), (2, 1), (7, 3), (8, 8), (5, 5), (9, 1), (33, 32)]
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("n,b", EDGE_SHAPES)
+@pytest.mark.parametrize("kind", ["zeros", "constant", "inf", "normal"])
+def test_selectors_exact_b_unique_in_range(method, n, b, kind):
+    losses = _rand_losses(n) if kind == "normal" else _pathological(kind, n)
+    cfg = SelectionConfig(
+        method=method, ratio=b / n,
+        mink_pool=max(b // 2, 1) if method == "mink" else None,
+    )
+    idx = jax.jit(lambda r, l: select(cfg, r, l, b))(RNG, losses)
+    _assert_valid(idx, n, b)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    data=st.data(),
+    n=st.integers(min_value=1, max_value=65),
+    kind=st.sampled_from(["zeros", "constant", "inf", "normal"]),
+    method=st.sampled_from(METHODS),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_selector_invariant_property(data, n, kind, method, seed):
+    """Property: every method returns exactly b unique in-range int32
+    indices for any 1 <= b <= n, any loss pathology, any key."""
+    b = data.draw(st.integers(min_value=1, max_value=n))
+    pool = data.draw(st.one_of(
+        st.none(), st.integers(min_value=1, max_value=n)))
+    losses = (_rand_losses(n, seed % 97) if kind == "normal"
+              else _pathological(kind, n))
+    cfg = SelectionConfig(
+        method=method, ratio=b / n,
+        mink_pool=pool if method == "mink" else None,
+    )
+    idx = select(cfg, jax.random.key(seed), losses, b)
+    _assert_valid(idx, n, b)
+
+
+# ---------------------------------------------------------------------------
+# signal-policy layer
+# ---------------------------------------------------------------------------
+
+
+def _signals(n, seed=3):
+    k = jax.random.key(seed)
+    ema = jnp.abs(jax.random.normal(k, (n,))) * 2
+    sig = jnp.abs(jax.random.normal(jax.random.key(seed + 1), (n, N_AUX)))
+    seen = jax.random.uniform(jax.random.key(seed + 2), (n,)) < 0.7
+    return ema, sig, seen
+
+
+def test_policies_registry_surface():
+    assert set(POLICIES) >= {"uniform", "loss_ema", "entropy", "margin"}
+    for name, pol in POLICIES.items():
+        assert pol.name == name
+        assert isinstance(pol, SelectionPolicy)  # runtime protocol
+        assert set(pol.channels) <= {"loss", *AUX_CHANNELS}
+    with pytest.raises(KeyError):
+        get_policy("nope")
+
+
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_policy_scores_nonnegative_and_jittable(name):
+    n = 24
+    ema, sig, seen = _signals(n)
+    pol = get_policy(name)
+    s = jax.jit(
+        lambda e, g, sn: policy_score(pol, e, g, sn, 1e3)
+    )(ema, sig, seen)
+    s = np.asarray(s)
+    assert s.shape == (n,) and s.dtype == np.float32
+    assert (s >= 0).all()
+    if name != "uniform":  # cold fallback marks unseen must-see
+        assert (s[~np.asarray(seen)] == 1e3).all()
+    else:  # the control must NOT be biased toward unseen instances
+        assert (s == 0).all()
+
+
+def test_policy_scores_match_formulas():
+    n = 16
+    ema, sig, seen = _signals(n)
+    seen = jnp.ones((n,), bool)  # isolate the formulas from cold fallback
+    e, g = np.asarray(ema), np.asarray(sig)
+    np.testing.assert_allclose(
+        np.asarray(policy_score(get_policy("loss_ema"), ema, sig, seen, 0)),
+        np.maximum(e, 0), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(policy_score(get_policy("entropy"), ema, sig, seen, 0)),
+        np.maximum(g[:, 0], 0), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(policy_score(get_policy("margin"), ema, sig, seen, 0)),
+        np.log1p(np.exp(-g[:, 1])), rtol=1e-5)
+
+
+def test_select_by_score_contract_and_uniform_degeneracy():
+    n, b = 40, 6
+    ema, sig, seen = _signals(n)
+    for name in sorted(POLICIES):
+        s = policy_score(get_policy(name), ema, sig, seen, 1e3)
+        idx = jax.jit(lambda r, sc: select_by_score(r, sc, b))(RNG, s)
+        _assert_valid(idx, n, b)
+    # all-equal scores (the uniform arm) == pure Gumbel draw of the key
+    key = jax.random.key(11)
+    got = select_by_score(key, jnp.zeros((n,)), b)
+    g = jax.random.gumbel(key, (n,), dtype=jnp.float32)
+    want = jax.lax.top_k(g, b)[1].astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_select_by_score_prefers_high_scores():
+    n, b = 64, 8
+    scores = jnp.zeros((n,)).at[:b].set(100.0)  # overwhelming mass up front
+    hits = 0
+    for i in range(20):
+        idx = np.asarray(select_by_score(jax.random.key(i), scores, b))
+        hits += int((idx < b).sum())
+    assert hits / (20 * b) > 0.9  # ∝-score sampling, not a uniform draw

@@ -1,0 +1,228 @@
+"""Serve-time signal channels: derivation oracles, ledger semantics,
+checkpoint interchange, and the engine recording them in the fused step.
+
+The signal store's contract (``history.AUX_CHANNELS``): entropy and
+margin EMA alongside the loss under the same decay and ownership rules;
+a signal-less record leaves a same-owner's channels untouched but zeroes
+them on eviction; checkpoints written before the channel existed load
+with sig = 0.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import device_ledger as dl
+from repro.core.history import (
+    AUX_CHANNELS,
+    N_AUX,
+    HistoryConfig,
+    LossHistory,
+    rehash_state_dict,
+)
+from repro.serving.recorder import full_signals, topk_signals
+
+CFG = HistoryConfig(capacity=256, decay=0.7)
+
+
+# -- derivation oracles ------------------------------------------------------
+
+
+def _logits(t=7, v=96, seed=0, scale=3.0):
+    r = np.random.default_rng(seed)
+    x = (r.normal(size=(t, v)) * scale).astype(np.float32)
+    lse = np.log(np.exp(x.astype(np.float64)).sum(-1)).astype(np.float32)
+    return x, lse
+
+
+def test_full_signals_match_numpy_oracle():
+    x, lse = _logits()
+    p = np.exp(x.astype(np.float64) - lse[:, None].astype(np.float64))
+    ent = -(p * (x - lse[:, None])).sum(-1)
+    top = np.sort(x, -1)[:, ::-1]
+    e, m = full_signals(jnp.asarray(x), jnp.asarray(lse))
+    np.testing.assert_allclose(np.asarray(e), ent, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(m), top[:, 0] - top[:, 1],
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("k", [1, 2, 8, 96])
+def test_topk_signals_certain_lower_bound_and_margin(k):
+    """The truncated entropy never exceeds the exact entropy (every tail
+    surprisal is >= the tail floor), equals it at K = V, and the margin
+    is exact whenever K >= 2 (the top-2 logits are retained verbatim)."""
+    x, lse = _logits()
+    top = np.sort(x, -1)[:, ::-1]
+    e_full, m_full = full_signals(jnp.asarray(x), jnp.asarray(lse))
+    e, m = topk_signals(jnp.asarray(top[:, :k].copy()), jnp.asarray(lse))
+    assert np.all(np.asarray(e) <= np.asarray(e_full) + 1e-3)
+    assert np.all(np.asarray(e) >= 0)
+    if k >= 2:
+        np.testing.assert_allclose(np.asarray(m), np.asarray(m_full),
+                                   rtol=1e-5)
+    else:
+        assert np.all(np.asarray(m) == 0)
+    if k == x.shape[-1]:
+        np.testing.assert_allclose(np.asarray(e), np.asarray(e_full),
+                                   rtol=1e-3)
+
+
+# -- ledger signal semantics (host <-> device parity) ------------------------
+
+
+def _drive(record_h, record_d, steps=20, batch=12, ids_range=600, seed=0):
+    rng = np.random.default_rng(seed)
+    for step in range(steps):
+        ids = rng.integers(0, ids_range, size=batch).astype(np.int64)
+        losses = rng.normal(2.0, 1.0, size=batch).astype(np.float32)
+        sig = (rng.random((batch, N_AUX)) * 3).astype(np.float32)
+        # every third record is signal-less (a train-side loss record)
+        s = None if step % 3 == 2 else sig
+        record_h(ids, losses, step, s)
+        record_d(ids, losses, step, s)
+
+
+def test_signal_record_parity_host_device():
+    h = LossHistory(CFG)
+    d = dl.DeviceLedger(CFG)
+    _drive(lambda i, l, s, g: h.record(i, l, s, signals=g),
+           lambda i, l, s, g: d.record(i, l, s, signals=g))
+    hs, ds = h.state_dict(), d.state_dict()
+    assert set(hs) == set(ds) and "sig" in hs
+    for k in hs:
+        if k in ("ema", "sig"):  # XLA may fuse the EMA into an FMA: 1 ulp
+            np.testing.assert_allclose(hs[k], np.asarray(ds[k]),
+                                       rtol=1e-6, err_msg=k)
+        else:
+            np.testing.assert_array_equal(hs[k], np.asarray(ds[k]), err_msg=k)
+
+
+def test_lookup_signals_parity_and_unseen_zero():
+    h = LossHistory(CFG)
+    d = dl.DeviceLedger(CFG)
+    _drive(lambda i, l, s, g: h.record(i, l, s, signals=g),
+           lambda i, l, s, g: d.record(i, l, s, signals=g))
+    ids = np.concatenate([np.arange(0, 40), [10_001, 10_002]])  # + unseen
+    eh, sh, nh = h.lookup_signals(ids)
+    ed, sd, nd = d.lookup_signals(ids)
+    np.testing.assert_allclose(eh, np.asarray(ed), rtol=1e-6)
+    np.testing.assert_allclose(sh, np.asarray(sd), rtol=1e-6)
+    np.testing.assert_array_equal(nh, np.asarray(nd))
+    assert sh.shape == (len(ids), N_AUX)
+    assert (sh[~nh] == 0).all()  # unseen rows answer zero signal
+
+
+def test_signalless_record_preserves_then_eviction_zeroes():
+    h = LossHistory(HistoryConfig(capacity=4, decay=0.5))
+    h.record([1], [1.0], 0, signals=[[2.0, 3.0]])
+    sig0 = h.lookup_signals([1])[1][0].copy()
+    assert (sig0 > 0).all()
+    # same-owner signal-less record: channels untouched
+    h.record([1], [5.0], 1)
+    np.testing.assert_array_equal(h.lookup_signals([1])[1][0], sig0)
+    # evicting record (capacity 4 => id 1+4k collides): channels zeroed
+    evictor = 1 + 4 * next(
+        k for k in range(1, 64)
+        if (slot := h._slot(np.asarray([1 + 4 * k]))[0])
+        == h._slot(np.asarray([1]))[0]
+    )
+    h.record([evictor], [1.0], 2)
+    assert (h.lookup_signals([evictor])[1][0] == 0).all()
+
+
+def test_pre_signal_checkpoints_load_with_zero_sig(tmp_path):
+    h = LossHistory(CFG)
+    h.record(np.arange(10), np.ones(10), 0, signals=np.ones((10, N_AUX)))
+    old = {k: v for k, v in h.state_dict().items() if k != "sig"}
+    np.savez(tmp_path / "old.npz", **old)
+    loaded = dict(np.load(tmp_path / "old.npz"))
+    h2 = LossHistory(CFG)
+    h2.load_state_dict(loaded)
+    assert (h2.sig == 0).all()
+    assert (h2.owner == h.owner).all()
+    d2 = dl.DeviceLedger(CFG)
+    d2.load_state_dict(dict(loaded))
+    assert (np.asarray(d2.state.sig) == 0).all()
+    # rehash of an old-format dict also materializes a zero sig channel
+    re = rehash_state_dict(dict(loaded), CFG.capacity * 2)
+    assert re["sig"].shape == (CFG.capacity * 2, N_AUX)
+    assert (re["sig"] == 0).all()
+
+
+def test_record_priority_signals_parity_ref_vs_interpret():
+    r = np.random.default_rng(3)
+    ids = jnp.asarray(r.integers(0, 500, 16).astype(np.int32))
+    losses = jnp.asarray(r.random(16).astype(np.float32))
+    sig = jnp.asarray(r.random((16, N_AUX)).astype(np.float32))
+    out = {}
+    for impl in ("ref", "interpret"):
+        st = dl.init_state(CFG)
+        st, pri = dl.record_priority(CFG, st, ids, losses, 0, impl=impl,
+                                     signals=sig)
+        out[impl] = (dl.state_dict_of(st), np.asarray(pri))
+    np.testing.assert_array_equal(out["ref"][1], out["interpret"][1])
+    for k in out["ref"][0]:
+        np.testing.assert_array_equal(
+            np.asarray(out["ref"][0][k]), np.asarray(out["interpret"][0][k]),
+            err_msg=k)
+
+
+def test_device_signal_transaction_transfer_free():
+    """record(signals=) + lookup_signals + policy scoring in one jit under
+    transfer_guard("disallow") — the acceptance property: the serve-time
+    signal channels never touch the host inside the fused step."""
+    from repro.core.selection import get_policy, policy_score
+
+    pol = get_policy("margin")
+
+    @jax.jit
+    def tx(st, ids, losses, sig, step):
+        st = dl.record(CFG, st, ids, losses, step, signals=sig)
+        ema, s, seen = dl.lookup_signals(st, ids)
+        return st, policy_score(pol, ema, s, seen, 1e3)
+
+    ids = jnp.arange(32, dtype=jnp.int32)
+    losses = jnp.ones((32,))
+    sig = jnp.ones((32, N_AUX))
+    # stage the step scalars on device BEFORE the guard — constructing one
+    # inside it would itself be a (test-harness) host-to-device transfer
+    steps = [jnp.int32(0), jnp.int32(1)]
+    st, pri = tx(dl.init_state(CFG), ids, losses, sig, steps[0])  # compile
+    jax.block_until_ready((st, pri))
+    with jax.transfer_guard("disallow"):
+        st, pri = tx(st, ids, losses, sig, steps[1])
+        jax.block_until_ready((st, pri))
+    assert np.asarray(pri).shape == (32,)
+
+
+# -- the engine records signals from its fused step --------------------------
+
+
+@pytest.mark.parametrize("retention", ["full", "topk"])
+def test_engine_records_entropy_and_margin(retention):
+    from repro import configs
+    from repro.models import model as Mdl
+    from repro.models.params import materialize
+    from repro.serving import Engine, OutcomeRecorder, delayed_outcomes
+
+    cfg = configs.get_smoke("llama3-8b")
+    params = materialize(Mdl.param_specs(cfg), jax.random.key(0),
+                         jnp.dtype(cfg.param_dtype))
+    rec = OutcomeRecorder(4, 6, cfg.vocab_size, CFG, ledger="device",
+                          retention=retention, topk=8)
+    eng = Engine(cfg, params, rec, slots=4, max_prompt=8, max_gen=6)
+    r = np.random.default_rng(0)
+    outs = []
+    for _ in range(5):
+        iid = eng.submit(r.integers(1, cfg.vocab_size, 5), max_new=6)
+        outs.append((iid, r.integers(0, cfg.vocab_size, 6)))
+    eng.run(on_step=delayed_outcomes(outs, 2))
+    ids = np.array([iid for iid, _ in outs])
+    ema, sig, seen = eng.ledger.lookup_signals(ids)
+    assert seen.all()
+    assert (ema > 0).all()
+    # both channels recorded: positive entropy always; margins of argmax
+    # decoding are strictly positive too
+    assert (sig[:, AUX_CHANNELS.index("entropy")] > 0).all()
+    assert (sig[:, AUX_CHANNELS.index("margin")] > 0).all()
