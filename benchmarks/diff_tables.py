@@ -1,9 +1,15 @@
 """Diff two nightly benchmark result files and flag regressions (fail-soft).
 
     python -m benchmarks.diff_tables prev.txt curr.txt [--threshold 0.25] \
-        [--summary-out summary.md]
+        [--summary-out summary.md] \
+        [--history-dir benchmarks/history --update-history --run-label ID]
 
 The nightly job feeds this the previous run's artifact and today's output.
+With ``--history-dir`` it additionally keeps a COMMITTED per-table series
+(``BENCH_<table>.json``, bounded to the last ``--history-max`` runs) that
+survives artifact expiry, and reports the long-horizon trend — a slow
+drift that never trips the one-step threshold still surfaces when the
+current run is compared against the oldest retained one.
 Rows are the CSV lines the benchmark sections emit
 (``table,key...,metric[,extra]``); a row is keyed by its non-numeric
 cells PLUS any numeric cell whose column names a configuration axis
@@ -20,7 +26,14 @@ shared runner was slow; the job summary carries the warnings instead.
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import re
 import sys
+
+# committed-history bound: one nightly per day -> roughly two months of
+# trend, a few KiB per table file
+HISTORY_MAX = 60
 
 # metric-column name fragments that mean "bigger is better"
 _UP_GOOD = ("tok_per_s", "ratio", "hit", "accuracy", "max_slots")
@@ -32,7 +45,7 @@ _UP_GOOD = ("tok_per_s", "ratio", "hit", "accuracy", "max_slots")
 # max_slots_per_gib are the metrics there: a bytes_per_slot increase or a
 # max_slots_per_gib drop flags a retained-outcome memory regression)
 _KEY_COLS = ("n", "capacity", "batch", "slots", "gen", "size", "steps",
-             "seq", "shape", "ratio", "vocab", "topk", "policy")
+             "seq", "shape", "ratio", "vocab", "topk", "policy", "ctx")
 
 
 def parse_tables(text: str) -> dict[tuple, dict[str, float]]:
@@ -144,6 +157,85 @@ def policy_check(curr: str, threshold: float) -> list[str]:
     return warns
 
 
+# ---------------------------------------------------------------------------
+# committed history series (BENCH_<table>.json) + long-horizon trend
+# ---------------------------------------------------------------------------
+
+
+def _by_table(rows: dict[tuple, dict[str, float]]):
+    """Group parse_tables rows by their table name (first key cell); the
+    JSON row key is the remaining key cells joined with '|'."""
+    tables: dict[str, dict[str, dict[str, float]]] = {}
+    for key, vals in rows.items():
+        tables.setdefault(key[0], {})["|".join(key[1:])] = vals
+    return tables
+
+
+def _history_file(history_dir: str, table: str) -> str:
+    safe = re.sub(r"[^A-Za-z0-9_-]", "_", table)
+    return os.path.join(history_dir, f"BENCH_{safe}.json")
+
+
+def load_history(history_dir: str, table: str) -> list[dict]:
+    """-> the run series for one table, oldest first: each entry is
+    {"label": str, "rows": {rowkey: {col: value}}}."""
+    try:
+        with open(_history_file(history_dir, table)) as f:
+            return json.load(f)["runs"]
+    except (OSError, ValueError, KeyError):
+        return []
+
+
+def update_history(history_dir: str, curr: str, label: str,
+                   max_runs: int = HISTORY_MAX) -> list[str]:
+    """Append the current run to every table's series (bounded), creating
+    the dir/files on first use. Returns one info line per table."""
+    os.makedirs(history_dir, exist_ok=True)
+    infos = []
+    for table, rows in sorted(_by_table(parse_tables(curr)).items()):
+        runs = load_history(history_dir, table)
+        runs.append({"label": label, "rows": rows})
+        runs = runs[-max_runs:]
+        with open(_history_file(history_dir, table), "w") as f:
+            json.dump({"table": table, "runs": runs}, f, indent=1,
+                      sort_keys=True)
+            f.write("\n")
+        infos.append(f"history: {table} <- run '{label}' "
+                     f"({len(runs)}/{max_runs} runs retained)")
+    return infos
+
+
+def trend(history_dir: str, curr: str, threshold: float) -> list[str]:
+    """Current run vs the OLDEST retained run of each table's series —
+    the slow-drift check the one-step diff cannot see. Only drifts in the
+    bad direction (per _UP_GOOD) are flagged; a row must exist at both
+    ends of the window to have a trend."""
+    warns = []
+    for table, rows in sorted(_by_table(parse_tables(curr)).items()):
+        runs = load_history(history_dir, table)
+        if not runs:
+            continue
+        oldest = runs[0]
+        span = len(runs) + 1  # retained window + the current run
+        for rowkey, cvals in sorted(rows.items()):
+            ovals = oldest["rows"].get(rowkey)
+            if ovals is None:
+                continue
+            for col, cv in cvals.items():
+                ov = ovals.get(col)
+                if ov is None or ov == 0:
+                    continue
+                rel = (cv - ov) / abs(ov)
+                up_good = any(frag in col for frag in _UP_GOOD)
+                if (-rel if up_good else rel) > threshold:
+                    warns.append(
+                        f"TREND {table},{rowkey} {col}: {ov:.3g} -> "
+                        f"{cv:.3g} ({rel:+.0%} over {span} runs, since "
+                        f"'{oldest['label']}')"
+                    )
+    return warns
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("prev")
@@ -158,6 +250,15 @@ def main(argv=None) -> int:
                          "controls that flags a policy (tighter than "
                          "--threshold: controls share the run, so runner "
                          "noise largely cancels)")
+    ap.add_argument("--history-dir", default="",
+                    help="directory of committed BENCH_<table>.json series; "
+                         "enables the long-horizon trend report")
+    ap.add_argument("--update-history", action="store_true",
+                    help="append the current run to the series (bounded)")
+    ap.add_argument("--run-label", default="",
+                    help="label stored with the history entry (run id/date)")
+    ap.add_argument("--history-max", type=int, default=HISTORY_MAX,
+                    help="runs retained per table series")
     args = ap.parse_args(argv)
     curr = open(args.curr).read()
     lines = ["## Nightly benchmark trend", ""]
@@ -179,6 +280,25 @@ def main(argv=None) -> int:
         if infos:
             lines.append("")
             lines += [f"- {i}" for i in infos]
+    # long-horizon trend: current vs the oldest retained history run
+    # (checked BEFORE appending, so the window never compares a run to
+    # itself); then append today's rows to the committed series
+    if args.history_dir:
+        twarns = trend(args.history_dir, curr, args.threshold)
+        lines.append("")
+        if twarns:
+            lines.append(f"⚠️ {len(twarns)} slow drift(s) beyond "
+                         f"{args.threshold:.0%} across the retained "
+                         "history window:")
+            lines += [f"- {w}" for w in twarns]
+        else:
+            lines.append(f"✅ no drift beyond {args.threshold:.0%} across "
+                         "the retained history window")
+        if args.update_history:
+            for i in update_history(args.history_dir, curr,
+                                    args.run_label or "unlabeled",
+                                    args.history_max):
+                lines.append(f"- {i}")
     # the policy A/B verdict is within-run: it fires with or without prev
     pwarns = policy_check(curr, args.policy_threshold)
     lines.append("")

@@ -69,6 +69,32 @@ def main(fast: bool = False) -> list[str]:
         out.append(
             f"kernel,decode_attn,T{t},{ms:.2f},{decode_traffic_ratio(t, hq, hkv, d):.2f}"
         )
+    # paged decode_attn: the same flash reduction with K/V gathered
+    # through a page table. ms times the ref/XLA path (gather pages to the
+    # dense layout + attend) that the paged Pallas grid replaces; the
+    # traffic model is the dense one — scores stay in VMEM either way and
+    # the indirection adds only the [B, NP] int32 table, which is noise —
+    # so the ratio column is shared. What paging buys is HBM capacity,
+    # priced in selection_bench's kv[*] rows, not bandwidth.
+    for t in ((4096,) if fast else (4096, 32768)):
+        b, hq, hkv, d, ps = 4, 32, 8, 128, 256
+        per = t // ps
+        ks = jax.random.split(jax.random.key(1), 4)
+        q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+        kp = jax.random.normal(ks[1], (b * per, ps, hkv, d), jnp.float32)
+        vp = jax.random.normal(ks[2], (b * per, ps, hkv, d), jnp.float32)
+        pt = jax.random.permutation(ks[3], b * per).reshape(b, per)
+        pt = pt.astype(jnp.int32)
+        pos = jnp.full((b,), t - 1, jnp.int32)
+        f = jax.jit(
+            lambda q, kp, vp, pt, pos: ops.paged_decode_attn(
+                q, kp, vp, pt, pos, "ref"
+            )
+        )
+        ms = _time(f, q, kp, vp, pt, pos)
+        out.append(
+            f"kernel,paged_decode_attn,T{t}xP{ps},{ms:.2f},{decode_traffic_ratio(t, hq, hkv, d):.2f}"
+        )
     # ledger scatter: the XLA/ref-path wall time the Pallas kernel replaces,
     # plus which scatter variant the batch-size dispatch picks and the
     # analytic per-item vector-work ratio of the block tiling (each item

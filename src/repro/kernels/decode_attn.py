@@ -65,6 +65,113 @@ def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_s, s_s, acc_s):
         )
 
 
+def _paged_decode_kernel(
+    pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_s, s_s, acc_s
+):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+    npg = pl.num_programs(2)
+    g, d = q_ref.shape
+    page = k_ref.shape[0]
+
+    @pl.when(pi == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        s_s[...] = jnp.zeros_like(s_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[...].astype(F32)  # [G, D]
+    k = k_ref[...].astype(F32)  # [page, D] — the gathered physical page
+    v = v_ref[...].astype(F32)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32
+    ) * (d**-0.5)  # [G, page]
+    # validity is computed in-kernel from (logical position, pos): page pi
+    # covers logical positions [pi*page, (pi+1)*page); position pos itself
+    # (the token just written) is attended. An unallocated table entry
+    # (-1, DMA'd clamped to page 0) is masked wholesale.
+    t = pi * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    ok = (t <= pos_ref[b]) & (pt_ref[b, pi] >= 0)
+    scores = jnp.where(ok, scores, NEG_INF)
+
+    m_prev, s_prev = m_s[...], s_s[...]  # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    p = jnp.exp(scores - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    s_s[...] = s_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32
+    )
+    m_s[...] = m_new
+
+    @pl.when(pi == npg - 1)
+    def _emit():
+        o_ref[...] = (acc_s[...] / jnp.maximum(s_s[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attn(
+    q: jax.Array,  # [B, Hq, D]
+    kp: jax.Array,  # [P, page, Hkv, D] global page pool
+    vp: jax.Array,  # [P, page, Hkv, D]
+    page_table: jax.Array,  # [B, NP] i32, -1 = unallocated
+    pos: jax.Array,  # [B] i32 per-slot depth (position pos is attended)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged flash decode attention: the dense kernel's grid extended to
+    gather K/V blocks *through the page table*. The table and positions
+    ride in as scalar-prefetch operands (``PrefetchScalarGridSpec``), so
+    the K/V BlockSpec index maps can address physical pages — each grid
+    step DMAs exactly one page; no [B, T, ...] dense gather ever
+    materializes. Grid (B, Hkv, NP), pages minor, online-softmax state in
+    VMEM scratch exactly like :func:`decode_attn`."""
+    b, hq, d = q.shape
+    p_, page, hkv, _ = kp.shape
+    npg = page_table.shape[1]
+    g = hq // hkv
+    qr = q.reshape(b, hkv, g, d)
+    pt = jnp.asarray(page_table, jnp.int32)
+    posr = jnp.asarray(pos, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, npg),
+        in_specs=[
+            pl.BlockSpec(
+                (None, None, g, d), lambda i, j, pi, pt, ps: (i, j, 0, 0)
+            ),
+            # physical page via the prefetched table; -1 clamps to page 0
+            # for the DMA and the kernel masks the whole block
+            pl.BlockSpec(
+                (None, page, None, d),
+                lambda i, j, pi, pt, ps: (jnp.maximum(pt[i, pi], 0), 0, j, 0),
+            ),
+            pl.BlockSpec(
+                (None, page, None, d),
+                lambda i, j, pi, pt, ps: (jnp.maximum(pt[i, pi], 0), 0, j, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, None, g, d), lambda i, j, pi, pt, ps: (i, j, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), F32),
+            pltpu.VMEM((g, 1), F32),
+            pltpu.VMEM((g, d), F32),
+        ],
+    )
+    out = pl.pallas_call(
+        _paged_decode_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(pt, posr, qr, kp, vp)
+    return out.reshape(b, hq, d)
+
+
 @functools.partial(jax.jit, static_argnames=("bt", "interpret"))
 def decode_attn(
     q: jax.Array,  # [B, Hq, D]

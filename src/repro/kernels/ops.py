@@ -119,6 +119,25 @@ def decode_attn(
     return _da.decode_attn(q, k, v, valid, interpret=(impl == "interpret"))
 
 
+def paged_decode_attn(
+    q: jax.Array,
+    kp: jax.Array,
+    vp: jax.Array,
+    page_table: jax.Array,
+    pos: jax.Array,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Decode attention through the paged KV pool (see
+    ``kernels.decode_attn.paged_decode_attn``): q [B,Hq,D], pool
+    [P,page,Hkv,D], page_table [B,NP] (-1 = unallocated), pos [B]."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.paged_decode_attn_ref(q, kp, vp, page_table, pos)
+    return _da.paged_decode_attn(
+        q, kp, vp, page_table, pos, interpret=(impl == "interpret")
+    )
+
+
 # ---------------------------------------------------------------------------
 # fused recycle-ledger record+priority (no vjp — the ledger is not a
 # differentiable quantity; it is stop_gradient state by construction)

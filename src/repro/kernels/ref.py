@@ -61,6 +61,30 @@ def decode_attn_ref(
     return out.reshape(b, hq, d).astype(q.dtype)
 
 
+def paged_decode_attn_ref(
+    q: Array,  # [B, Hq, D]
+    kp: Array,  # [P, page, Hkv, D] global page pool
+    vp: Array,  # [P, page, Hkv, D]
+    page_table: Array,  # [B, NP] i32 physical page per logical block
+    pos: Array,  # [B] i32 per-slot depth; position pos is attended
+) -> Array:
+    """Decode attention through a paged KV pool -> [B, Hq, D].
+
+    Gathers each row's pages back into the dense [B, T, Hkv, D] layout
+    (T = NP * page) and defers to :func:`decode_attn_ref` with the
+    position-validity mask ``t <= pos``. Unallocated table entries (-1)
+    are clamped to page 0 — whatever is read there is masked, and masked
+    scores contribute exactly-zero softmax weight."""
+    b = q.shape[0]
+    p_, page, hkv, d = kp.shape
+    t = page_table.shape[1] * page
+    pt = jnp.maximum(page_table, 0)
+    k = kp[pt].reshape(b, t, hkv, d)
+    v = vp[pt].reshape(b, t, hkv, d)
+    valid = jnp.arange(t)[None] <= pos[:, None]
+    return decode_attn_ref(q, k, v, valid)
+
+
 def ledger_record_priority_ref(
     ema: Array,  # [capacity] f32
     count: Array,  # [capacity] i32

@@ -1,0 +1,7 @@
+"""Launch entry points (CLI): train, serve, recycle, mesh helpers.
+
+Each module is runnable as ``python -m repro.launch.<name>``; this package
+marker makes ``repro.launch`` a regular (non-namespace) package so tooling
+that walks packages (pytest rootdir scans, pkgutil) sees it like every
+other ``repro`` subpackage.
+"""

@@ -64,6 +64,11 @@ def build_engine(args, cfg, params):
         slots=args.batch,
         max_prompt=args.prompt_len,
         max_gen=args.gen,
+        page_size=args.page_size if args.page_size > 0 else None,
+        num_pages=args.num_pages if args.num_pages > 0 else None,
+        temperature=args.temperature,
+        top_p=args.top_p,
+        sample_seed=args.seed,
     )
 
 
@@ -127,6 +132,17 @@ def main(argv=None) -> int:
                          "after admission (0 = attach at submit) — the "
                          "late-outcome serving path")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache page size in tokens (0 = dense "
+                         "per-slot reservation)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="global KV page pool size (0 = dense-equivalent "
+                         "slots * ceil(max_seq / page_size))")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-slot sampling temperature (0 = greedy argmax, "
+                         "the bit-reproducible default)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (only with --temperature>0)")
     ap.add_argument("--instance-pool", type=int, default=1 << 20,
                     help="distinct stream instance ids before reuse")
     ap.add_argument("--retain", default="full", choices=("full", "topk"),

@@ -402,6 +402,34 @@ def _scan_fill(body, x, stacked, remat):
     return jax.lax.scan(f, x, stacked)
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int) -> dict:
+    """Global paged KV pool, stacked over layers: [L, P, page, kv, hd].
+
+    A physical page id addresses the same page across every layer, so one
+    per-slot page table serves the whole stack (the vLLM block-table
+    layout). Only plain-GQA causal families qualify: recurrent state, MoE
+    capacity, latent (MLA) caches, rolling SWA windows and int8-quantized
+    caches all keep the dense per-slot layout."""
+    if cfg.family not in ("dense", "audio", "vlm"):
+        raise NotImplementedError(
+            f"paged KV cache: family {cfg.family!r} has non-KV or "
+            "capacity-coupled cache state"
+        )
+    if cfg.attn_impl == "mla" or cfg.sliding_window is not None:
+        raise NotImplementedError(
+            "paged KV cache requires plain GQA without a sliding window"
+        )
+    if cfg.kv_cache_dtype == "int8":
+        raise NotImplementedError("paged KV cache: int8 KV not supported yet")
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "blocks": _stack_over(
+            cfg.num_layers,
+            lambda: L.gqa_paged_init_cache(cfg, num_pages, page_size, dt),
+        )
+    }
+
+
 def prefill(
     params: dict,
     cfg: ModelConfig,
@@ -469,9 +497,11 @@ def prefill(
     return logits, cache
 
 
-def _attn_block_decode(x, p, cfg, cache, pos, max_seq, ffn):
+def _attn_block_decode(x, p, cfg, cache, pos, max_seq, ffn, page_table=None):
     h = L.rmsnorm(x, p["attn_norm"], cfg.norm_eps)
-    if cfg.attn_impl == "mla":
+    if page_table is not None:
+        a, cache = L.gqa_paged_decode(h, p["attn"], cfg, cache, page_table, pos)
+    elif cfg.attn_impl == "mla":
         a, cache = L.mla_decode(h, p["attn"], cfg, cache, pos, max_seq)
     else:
         a, cache = L.gqa_decode(h, p["attn"], cfg, cache, pos, max_seq)
@@ -491,7 +521,8 @@ def _ssm_block_decode(x, p, cfg, cache):
 
 
 def decode_step(
-    params: dict, cfg: ModelConfig, cache: dict, tokens: Array, pos: Array
+    params: dict, cfg: ModelConfig, cache: dict, tokens: Array, pos: Array,
+    page_table: Optional[Array] = None,
 ) -> tuple[Array, dict]:
     """One decode step: tokens [B,1] -> (logits [B,V], cache).
 
@@ -500,11 +531,26 @@ def decode_step(
     its own depth (the continuous-batching engine). Attention families
     thread it through to the per-row cache scatter + validity mask; SSM
     recurrences are position-free and ignore it.
+
+    ``page_table`` ([B, NP] i32, -1 = unallocated) switches the attention
+    cache to the paged layout of :func:`init_paged_cache`: K/V writes and
+    reads go through the table instead of a per-slot dense reservation.
     """
     x = embed_tokens(params, cfg, tokens, None)
     new_cache: dict = {}
 
-    if cfg.family in ("dense", "audio", "vlm", "moe"):
+    if page_table is not None:
+        if cfg.family not in ("dense", "audio", "vlm"):
+            raise NotImplementedError(
+                f"paged decode: unsupported family {cfg.family!r}"
+            )
+        body = lambda x, lpc: _attn_block_decode(
+            x, lpc[0], cfg, lpc[1], pos, 0, "dense", page_table
+        )
+        x, new_cache["blocks"] = jax.lax.scan(
+            body, x, (params["blocks"], cache["blocks"])
+        )
+    elif cfg.family in ("dense", "audio", "vlm", "moe"):
         ffn = "moe" if cfg.family == "moe" else "dense"
         max_seq = _attn_cache_capacity(cfg, cache["blocks"])
         if cfg.family == "moe" and cfg.first_k_dense:

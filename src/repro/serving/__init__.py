@@ -15,8 +15,11 @@ from repro.serving.engine import (  # noqa: F401
     Request,
     delayed_outcomes,
     insert_cache_slot,
+    insert_paged_cache_slot,
+    make_slot_sampler,
     pad_safe,
 )
+from repro.serving.pages import PagePool, pages_for  # noqa: F401
 from repro.serving.recorder import (  # noqa: F401
     RETENTIONS,
     OutcomeRecorder,

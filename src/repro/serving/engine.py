@@ -40,6 +40,7 @@ import numpy as np
 from repro.core.history import LossHistory
 from repro.models import model as Mdl
 from repro.models.config import ModelConfig
+from repro.serving.pages import PagePool, pages_for
 from repro.serving.recorder import OutcomeRecorder, RecorderState
 
 Array = jax.Array
@@ -83,11 +84,13 @@ class EngineState:
     max_new: Array  # [S]
     out_toks: Array  # [S, G] generated tokens
     step: Array  # [] i32 monotone decode-step counter (= ledger step)
+    page_table: Any = None  # [S, NP] i32 physical page per block (paged mode)
 
     def tree_flatten(self):
         return (
             self.cache, self.cur_tok, self.pos, self.gen_idx, self.inst,
             self.prompt_len, self.max_new, self.out_toks, self.step,
+            self.page_table,
         ), None
 
     @classmethod
@@ -118,6 +121,76 @@ def insert_cache_slot(
     return out
 
 
+def insert_paged_cache_slot(
+    cfg: ModelConfig, cache: dict, new: dict, pt_row: Array, page_size: int
+) -> dict:
+    """Scatter a batch-1 dense prefill cache into the pages a slot owns.
+
+    ``pt_row`` [NP] maps the slot's logical blocks to physical pages of the
+    global pool; -1 entries (blocks not yet allocated — growth pages, or the
+    tail past the prompt bucket) drop their writes. The prefill cache is
+    dense [L, 1, T, kv, hd]; T need not fill NP pages — the tail pads with
+    zeros, which only lands in allocated pages past the prompt where decode
+    overwrites it before validity ever reaches it.
+    """
+    npg = pt_row.shape[0]
+
+    def put(pool, dense):
+        l, _, t, kv, hd = dense.shape
+        pad = npg * page_size - t
+        d = jnp.pad(dense[:, 0], [(0, 0), (0, pad), (0, 0), (0, 0)])
+        d = d.reshape(l, npg, page_size, kv, hd)
+        # -1 would WRAP to the pool's last page (negative indices resolve
+        # numpy-style before mode="drop" sees them) — remap to one-past-end
+        idx = jnp.where(pt_row >= 0, pt_row, pool.shape[1])
+        return pool.at[:, idx].set(d, mode="drop")
+
+    blocks = cache["blocks"]
+    return {
+        "blocks": {
+            "kp": put(blocks["kp"], new["blocks"]["k"]),
+            "vp": put(blocks["vp"], new["blocks"]["v"]),
+        }
+    }
+
+
+def make_slot_sampler(temperature: float, top_p: float, seed: int):
+    """Per-slot token sampler for the fused decode step.
+
+    ``temperature <= 0`` returns exact greedy argmax — bit-identical to the
+    historical behavior, the setting every parity test pins. Otherwise each
+    slot samples from its own stateless RNG lane: the key is
+    ``fold_in(fold_in(key(seed), instance_id), gen_idx)``, a pure function
+    of (instance, position) — deterministic across runs and independent of
+    slot assignment or what else is in the batch. ``top_p < 1`` applies
+    nucleus filtering first (keep a token iff the probability mass strictly
+    before it in sorted order is < top_p; the top-1 token always survives).
+    """
+    if temperature <= 0.0:
+        return lambda logits, inst, gen_idx: jnp.argmax(
+            logits, axis=-1
+        ).astype(I32)
+    base = jax.random.key(seed)
+
+    def sample(logits: Array, inst: Array, gen_idx: Array) -> Array:
+        keys = jax.vmap(
+            lambda i, g: jax.random.fold_in(jax.random.fold_in(base, i), g)
+        )(inst.astype(jnp.uint32), gen_idx.astype(jnp.uint32))
+        x = logits.astype(jnp.float32) / temperature
+        if top_p < 1.0:
+            srt = jnp.sort(x, axis=-1)[:, ::-1]
+            p = jax.nn.softmax(srt, axis=-1)
+            mass_before = jnp.cumsum(p, axis=-1) - p
+            keep = mass_before < top_p
+            cut = jnp.min(
+                jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True
+            )
+            x = jnp.where(x >= cut, x, -jnp.inf)
+        return jax.vmap(jax.random.categorical)(keys, x).astype(I32)
+
+    return sample
+
+
 class Engine:
     """Continuous batching over a request queue (see module docstring).
 
@@ -141,6 +214,11 @@ class Engine:
         id_stride: int = 1,
         pad_token: int = 0,
         guard_transfers: bool = True,
+        page_size: Optional[int] = None,
+        num_pages: Optional[int] = None,
+        temperature: float = 0.0,
+        top_p: float = 1.0,
+        sample_seed: int = 0,
     ):
         self.cfg = cfg
         self.recorder = recorder  # self.params set below (mesh-replicated)
@@ -154,6 +232,34 @@ class Engine:
         self.max_seq = max_prompt + self.max_gen
         self.pad_token = pad_token
         self.guard_transfers = guard_transfers
+
+        # paged KV cache: slots share a global pool of page_size-token
+        # pages instead of each reserving a dense max_seq stripe. Admission
+        # allocates the prompt's pages AND reserves the request's
+        # worst-case growth, so mid-decode growth can never fail; pool
+        # exhaustion defers admission instead.
+        self.page_size = page_size
+        self.pool: Optional[PagePool] = None
+        if page_size is not None:
+            assert page_size > 0, page_size
+            self.pages_per_slot = pages_for(self.max_seq, page_size)
+            if num_pages is None:  # dense-equivalent capacity
+                num_pages = slots * self.pages_per_slot
+            assert num_pages >= self.pages_per_slot, (
+                num_pages, self.pages_per_slot,
+            )
+            self.num_pages = num_pages
+            self.pool = PagePool(num_pages, page_size)
+            self._slot_pages: dict[int, list[int]] = {}  # slot -> pages
+            self._slot_reserve: dict[int, int] = {}  # slot -> growth budget
+            self._pos_host = np.zeros((slots,), np.int64)  # device pos mirror
+        self.deferred_admissions = 0
+
+        self.temperature = float(temperature)
+        self.top_p = float(top_p)
+        self._sample = make_slot_sampler(
+            self.temperature, self.top_p, sample_seed
+        )
         if prompt_buckets is None and pad_safe(cfg):
             b, buckets = 8, []
             while b < max_prompt:
@@ -212,13 +318,28 @@ class Engine:
             lambda rs, slot, row: self.recorder.deliver(rs, slot, row),
             donate_argnums=(0,),
         )
+        # paged-mode host->device page-table maintenance (outside the
+        # transfer guard, like admission): scatter freshly grown pages /
+        # clear evicted rows, both at fixed [slots] shape with -1 padding
+        # dropped so one compile serves any count
+        self._grow_jit = jax.jit(self._grow_fn, donate_argnums=(0,))
+        self._clear_jit = jax.jit(self._clear_fn, donate_argnums=(0,))
 
     # -- device state --------------------------------------------------------
 
     def _init_state(self) -> EngineState:
         s, g = self.slots, self.max_gen
+        if self.page_size is not None:
+            cache = Mdl.init_paged_cache(
+                self.cfg, self.num_pages, self.page_size
+            )
+            page_table = jnp.full((s, self.pages_per_slot), -1, I32)
+        else:
+            cache = Mdl.init_cache(self.cfg, s, self.max_seq)
+            page_table = None
         return EngineState(
-            cache=Mdl.init_cache(self.cfg, s, self.max_seq),
+            cache=cache,
+            page_table=page_table,
             cur_tok=jnp.zeros((s, 1), I32),
             pos=jnp.zeros((s,), I32),
             gen_idx=jnp.zeros((s,), I32),
@@ -242,16 +363,25 @@ class Engine:
 
     def _insert_fn(
         self, estate, rstate, new_cache, logits0, slot, inst, plen, max_new,
-        labels_row,
+        labels_row, pt_row=None,
     ):
-        cache = insert_cache_slot(self.cfg, estate.cache, new_cache, slot)
-        t0 = jnp.argmax(logits0[0]).astype(I32)
+        if pt_row is None:
+            cache = insert_cache_slot(self.cfg, estate.cache, new_cache, slot)
+            page_table = estate.page_table
+        else:
+            cache = insert_paged_cache_slot(
+                self.cfg, estate.cache, new_cache, pt_row, self.page_size
+            )
+            page_table = estate.page_table.at[slot].set(pt_row)
+        inst_v = jnp.reshape(jnp.asarray(inst, I32), (1,))
+        t0 = self._sample(logits0, inst_v, jnp.zeros((1,), I32))[0]
         out_toks = estate.out_toks.at[slot].set(
             jnp.zeros((self.max_gen,), I32)
         )
         out_toks = out_toks.at[slot, 0].set(t0)
         estate = EngineState(
             cache=cache,
+            page_table=page_table,
             cur_tok=estate.cur_tok.at[slot, 0].set(t0),
             pos=estate.pos.at[slot].set(jnp.asarray(plen, I32)),
             gen_idx=estate.gen_idx.at[slot].set(1),
@@ -270,9 +400,10 @@ class Engine:
         occupied = estate.inst >= 0
         decoding = occupied & (estate.gen_idx < estate.max_new)
         logits, cache = Mdl.decode_step(
-            params, self.cfg, estate.cache, estate.cur_tok, estate.pos
+            params, self.cfg, estate.cache, estate.cur_tok, estate.pos,
+            page_table=estate.page_table,
         )
-        nxt = jnp.argmax(logits, axis=-1).astype(I32)
+        nxt = self._sample(logits, estate.inst, estate.gen_idx)
         bidx = jnp.arange(self.slots)
         tgt = jnp.where(decoding, estate.gen_idx, self.max_gen)
         out_toks = estate.out_toks.at[bidx, tgt].set(nxt, mode="drop")
@@ -286,6 +417,7 @@ class Engine:
         )
         new_es = EngineState(
             cache=cache,
+            page_table=estate.page_table,
             cur_tok=cur_tok,
             pos=estate.pos + adv,
             gen_idx=gen_idx,
@@ -310,6 +442,60 @@ class Engine:
             "n_recorded": rstate.n_recorded,
         }
         return new_es, rstate, metrics
+
+    def _grow_fn(self, estate, slots_arr, idxs, pages):
+        pt = estate.page_table.at[slots_arr, idxs].set(pages, mode="drop")
+        return dataclasses.replace(estate, page_table=pt)
+
+    def _clear_fn(self, estate, slots_arr):
+        pt = estate.page_table.at[slots_arr].set(-1, mode="drop")
+        return dataclasses.replace(estate, page_table=pt)
+
+    # -- paged-cache host bookkeeping ----------------------------------------
+
+    def _pages_needed(self, req: Request) -> tuple[int, int, int]:
+        """(allocate now, reserve for growth, total) pages for a request.
+
+        Now = the bucketed prompt; total = enough to hold the deepest
+        position the slot ever writes (``plen + max_new - 1``). Reserving
+        total - now at admission makes every later ``grow()`` infallible —
+        the per-REQUEST worst case, not the engine-wide ``max_seq``, which
+        is where the paged layout's HBM win comes from.
+        """
+        ps = self.page_size
+        n_now = pages_for(self._bucket(req.prompt.size), ps)
+        n_total = max(n_now, pages_for(req.prompt.size + req.max_new, ps))
+        return n_now, n_total - n_now, n_total
+
+    def _grow_pages(self) -> None:
+        """Allocate pages (from each slot's admission-time reservation) so
+        the next fused step's K/V write at ``pos`` lands in an owned page.
+        Runs before every decode; finished slots are already at their total
+        and no-op."""
+        ups: list[tuple[int, int, int]] = []
+        for slot in self._slot_of.values():
+            need = pages_for(int(self._pos_host[slot]) + 1, self.page_size)
+            while len(self._slot_pages[slot]) < need:
+                assert self._slot_reserve[slot] > 0, slot
+                self._slot_reserve[slot] -= 1
+                pg = self.pool.grow()
+                ups.append((slot, len(self._slot_pages[slot]), pg))
+                self._slot_pages[slot].append(pg)
+        if not ups:
+            return
+        assert len(ups) <= self.slots  # <= 1 new page per slot per step
+        # pad with slots (one-past-end -> dropped); NOT -1, which would
+        # wrap numpy-style to the last slot's row before "drop" applies
+        s = np.full((self.slots,), self.slots, np.int32)
+        i = np.zeros((self.slots,), np.int32)
+        p = np.zeros((self.slots,), np.int32)
+        for j, (sl, ix, pg) in enumerate(ups):
+            s[j], i[j], p[j] = sl, ix, pg
+        rep = self.recorder.replicate
+        self._estate = self._grow_jit(
+            self._estate, rep(jnp.asarray(s)), rep(jnp.asarray(i)),
+            rep(jnp.asarray(p)),
+        )
 
     # -- host API ------------------------------------------------------------
 
@@ -395,6 +581,17 @@ class Engine:
 
     def _admit(self, req: Request) -> None:
         slot = self._free.pop()
+        pt_row = None
+        if self.pool is not None:
+            n_now, n_later, _ = self._pages_needed(req)
+            pages = self.pool.admit(n_now, n_later)
+            assert pages is not None  # step() gated admission on fits()
+            row = np.full((self.pages_per_slot,), -1, np.int32)
+            row[: len(pages)] = pages
+            pt_row = self.recorder.replicate(jnp.asarray(row))
+            self._slot_pages[slot] = list(pages)
+            self._slot_reserve[slot] = n_later
+            self._pos_host[slot] = req.prompt.size
         p = self._bucket(req.prompt.size)
         toks = np.full((1, p), self.pad_token, np.int32)
         toks[0, : req.prompt.size] = req.prompt
@@ -416,7 +613,7 @@ class Engine:
         self._estate, self._rstate = self._insert(
             self._estate, self._rstate, new_cache, logits0,
             slot, req.instance_id, req.prompt.size, req.max_new,
-            jnp.asarray(row.astype(np.int32)),
+            jnp.asarray(row.astype(np.int32)), pt_row,
         )
         self._slot_of[req.instance_id] = slot
         self._max_new_of[req.instance_id] = req.max_new
@@ -428,6 +625,7 @@ class Engine:
         m = self._last_metrics
         if m is None:
             return
+        cleared: list[int] = []
         for inst, slot in list(self._slot_of.items()):
             if (
                 m["finished"][slot]
@@ -444,6 +642,23 @@ class Engine:
                 self._admission_seq.pop(inst, None)
                 self._free.append(slot)
                 self.evicted += 1
+                if self.pool is not None:
+                    self.pool.release(
+                        self._slot_pages.pop(slot),
+                        self._slot_reserve.pop(slot),
+                    )
+                    self._pos_host[slot] = 0
+                    cleared.append(slot)
+        if cleared:
+            # clear the freed rows to -1 so the (still-resident-shaped)
+            # frozen K/V writes of a reused slot can never land in pages
+            # that have moved on to another owner; pad with one-past-end
+            # (a -1 pad would wrap to the last slot and wipe its row)
+            arr = np.full((self.slots,), self.slots, np.int32)
+            arr[: len(cleared)] = cleared
+            self._estate = self._clear_jit(
+                self._estate, self.recorder.replicate(jnp.asarray(arr))
+            )
 
     def in_flight_ids(self) -> tuple[int, ...]:
         """Instance ids currently resident in a slot (admission order)."""
@@ -465,17 +680,29 @@ class Engine:
             # a request whose instance id is already resident must wait for
             # that slot to evict (two live slots under one id would corrupt
             # _slot_of and leak the older slot); later requests may admit
-            # ahead of it
-            idx = next(
-                (i for i, r in enumerate(self._queue)
-                 if r.instance_id not in self._slot_of),
-                None,
-            )
+            # ahead of it. In paged mode a request whose worst-case page
+            # need exceeds the pool's headroom defers (a smaller request
+            # behind it may still admit) — exhaustion never touches a live
+            # slot.
+            idx = None
+            for i, r in enumerate(self._queue):
+                if r.instance_id in self._slot_of:
+                    continue
+                if (
+                    self.pool is not None
+                    and not self.pool.fits(self._pages_needed(r)[2])
+                ):
+                    self.deferred_admissions += 1
+                    continue
+                idx = i
+                break
             if idx is None:
                 break
             self._admit(self._queue.pop(idx))
         if not self._slot_of:
             return None
+        if self.pool is not None:
+            self._grow_pages()
         if self.guard_transfers and self._warm:
             with jax.transfer_guard("disallow"):
                 out = self._decode(self.params, self._estate, self._rstate)
@@ -496,6 +723,10 @@ class Engine:
         self._last_metrics = metrics
         self.steps_run += 1
         self.generated_tokens += int(metrics["decoding"].sum())
+        if self.pool is not None:
+            # host mirror of the device pos vector (what _grow_pages keys
+            # on): advances exactly where the step decoded
+            self._pos_host += np.asarray(metrics["decoding"], bool)
         return metrics
 
     def run(self, max_steps: int = 1_000_000, on_step=None) -> dict:
@@ -524,6 +755,16 @@ class Engine:
             "missed_outcomes": self.missed_outcomes,
             "queued": len(self._queue),
             "in_flight": len(self._slot_of),
+            **(
+                {
+                    "pages_total": self.num_pages,
+                    "pages_free": self.pool.free_pages,
+                    "pages_reserved": self.pool.reserved_pages,
+                    "deferred_admissions": self.deferred_admissions,
+                }
+                if self.pool is not None
+                else {}
+            ),
         }
 
     # -- ledger interchange ---------------------------------------------------

@@ -1,0 +1,43 @@
+"""The host-vs-device ledger EMA comparison convention, in ONE place.
+
+The host ``LossHistory`` and the device/Pallas ledgers run the same EMA
+recurrence but not in the same floating-point order: the compiled path may
+fuse multiply-adds (FMA) and reassociate, so host/device EMAs agree to
+``allclose(rtol=1e-6)`` — NOT bit-exactly. Integer fields (``count``,
+``last_seen``, ``owner``) have no rounding and must match bit-for-bit.
+
+Every ledger/serving parity test imports these helpers instead of
+hand-rolling tolerances; ``EMA_RTOL`` is the single source of truth.
+(Device-vs-device comparisons on the SAME placement — e.g. a paged engine
+against a dense engine running the identical schedule — are a different
+convention: those are bit-exact, use ``np.testing.assert_array_equal``.)
+"""
+
+import numpy as np
+
+# host float64-free numpy vs XLA-compiled f32 EMA chains: FMA/reassociation
+# noise only, a few ulps — 1e-6 relative is the contract
+EMA_RTOL = 1e-6
+# derived quantities that stack more f32 ops on the EMA (priority's
+# staleness boost, cross-run EMA chains) get one decade of slack
+DERIVED_RTOL = 1e-5
+
+
+def assert_ema_close(actual, desired, *, rtol=EMA_RTOL, atol=0.0, err_msg=""):
+    """EMA (or EMA-derived, with ``rtol=DERIVED_RTOL``) parity assert."""
+    np.testing.assert_allclose(
+        np.asarray(actual), np.asarray(desired), rtol=rtol, atol=atol,
+        err_msg=err_msg,
+    )
+
+
+def assert_ledger_states_close(sd_a, sd_b, *, rtol=EMA_RTOL):
+    """Full state-dict parity: float tables to ``rtol``, integer tables
+    bit-exact."""
+    assert set(sd_a) == set(sd_b), (sorted(sd_a), sorted(sd_b))
+    for k in sd_a:
+        a, b = np.asarray(sd_a[k]), np.asarray(sd_b[k])
+        if np.issubdtype(a.dtype, np.integer):
+            np.testing.assert_array_equal(a, b, err_msg=k)
+        else:
+            np.testing.assert_allclose(a, b, rtol=rtol, err_msg=k)

@@ -9,6 +9,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from _hypothesis_compat import given, settings, st
+from _ledger_parity import DERIVED_RTOL, assert_ema_close, \
+    assert_ledger_states_close
 from repro.core import device_ledger as dl
 from repro.core.history import HistoryConfig, LossHistory, slot_for
 from repro.distributed.ledger import sharded_ledger_ops
@@ -63,10 +65,10 @@ def test_record_lookup_parity_with_collisions():
     he, hs = h.lookup(probe)
     de, ds = d.lookup(probe)
     np.testing.assert_array_equal(hs, np.asarray(ds))
-    np.testing.assert_allclose(he, np.asarray(de), rtol=1e-6)
+    assert_ema_close(de, he)
     # the table itself matches, not just the probed view
     sd = h.state_dict()
-    np.testing.assert_allclose(np.asarray(d.state.ema), sd["ema"], rtol=1e-6)
+    assert_ema_close(d.state.ema, sd["ema"])
     np.testing.assert_array_equal(np.asarray(d.state.owner), sd["owner"])
     np.testing.assert_array_equal(np.asarray(d.state.count), sd["count"])
 
@@ -75,9 +77,9 @@ def test_priority_parity_staleness_and_unseen():
     h, d, rng = _run_sequence(CFG)
     probe = rng.integers(0, 4000, size=256)  # half unseen
     for step in (25, 500, 50_000):  # exercise the staleness boost
-        np.testing.assert_allclose(
-            h.priority(probe, step), np.asarray(d.priority(probe, step)),
-            rtol=1e-5,
+        assert_ema_close(
+            d.priority(probe, step), h.priority(probe, step),
+            rtol=DERIVED_RTOL,
         )
 
 
@@ -144,7 +146,7 @@ def test_masked_record_equals_recording_valid_subset():
     he, hs = h.lookup(ids)
     de, ds = dl.lookup(st, ids)
     np.testing.assert_array_equal(np.asarray(ds), hs)
-    np.testing.assert_allclose(np.asarray(de), he, rtol=1e-6)
+    assert_ema_close(de, he)
     # fused path, ref vs interpret(=the Pallas kernel), same mask
     sa, pa = dl.record_priority(
         cfg, st, ids, losses, 5, valid=jnp.asarray(valid), impl="ref"
@@ -180,18 +182,13 @@ def test_state_dict_roundtrip_host_to_device_to_host():
     probe = rng.integers(0, 2000, size=128)
     # host -> device
     d2 = dl.DeviceLedger.from_host(h)
-    np.testing.assert_allclose(
-        np.asarray(d2.lookup(probe)[0]), h.lookup(probe)[0], rtol=1e-6
-    )
+    assert_ema_close(d2.lookup(probe)[0], h.lookup(probe)[0])
     # device -> host
     h2 = d.to_host()
-    np.testing.assert_allclose(h2.lookup(probe)[0], h.lookup(probe)[0], rtol=1e-6)
-    np.testing.assert_allclose(
-        h2.priority(probe, 77), h.priority(probe, 77), rtol=1e-6
-    )
+    assert_ema_close(h2.lookup(probe)[0], h.lookup(probe)[0])
+    assert_ema_close(h2.priority(probe, 77), h.priority(probe, 77))
     # byte-level: the exported dicts agree in the shared interchange format
-    for k, v in h.state_dict().items():
-        np.testing.assert_allclose(d.state_dict()[k], v, rtol=1e-6)
+    assert_ledger_states_close(d.state_dict(), h.state_dict())
 
 
 def test_state_dict_survives_npz(tmp_path):
@@ -201,9 +198,7 @@ def test_state_dict_survives_npz(tmp_path):
     h = LossHistory(CFG)
     h.load_state_dict(dict(np.load(path)))
     probe = rng.integers(0, 2000, size=64)
-    np.testing.assert_allclose(
-        h.lookup(probe)[0], np.asarray(d.lookup(probe)[0]), rtol=1e-6
-    )
+    assert_ema_close(d.lookup(probe)[0], h.lookup(probe)[0])
 
 
 # -- no host hop --------------------------------------------------------------
@@ -248,12 +243,8 @@ def test_sharded_ops_match_host_single_shard():
     probe = rng.integers(0, 3000, size=64)
     ema, seen = ops.lookup(st_, _i32(probe))
     np.testing.assert_array_equal(np.asarray(seen), h.lookup(probe)[1])
-    np.testing.assert_allclose(np.asarray(ema), h.lookup(probe)[0], rtol=1e-6)
-    np.testing.assert_allclose(
-        np.asarray(ops.priority(st_, _i32(probe), 12)),
-        h.priority(probe, 12),
-        rtol=1e-6,
-    )
+    assert_ema_close(ema, h.lookup(probe)[0])
+    assert_ema_close(ops.priority(st_, _i32(probe), 12), h.priority(probe, 12))
 
 
 def test_sharded_record_priority_fused():
@@ -291,8 +282,8 @@ def test_sharded_state_dict_roundtrips_global_layout():
             st_ = ops.record(st_, _i32(ids), jnp.asarray(losses), step)
             h.record(ids, losses, step)
         sd = ops.state_dict(st_)
-        for k, v in h.state_dict().items():
-            np.testing.assert_allclose(sd[k], v, rtol=1e-6, err_msg=k)
+        hsd = h.state_dict()
+        assert_ledger_states_close({k: sd[k] for k in hsd}, hsd)
         # global .npz -> single-table ledger -> sharded again
         led = dl.DeviceLedger(cfg)
         led.load_state_dict(sd)
@@ -328,14 +319,13 @@ def test_property_record_lookup_priority_parity(seed, batch, cap_log2, steps):
         h.record(ids, losses, step)
         d.record(ids, losses, step)
     probe = rng.integers(0, 4 * cfg.capacity, size=64)
-    np.testing.assert_allclose(
-        h.lookup(probe)[0], np.asarray(d.lookup(probe)[0]), rtol=1e-5, atol=1e-6
+    assert_ema_close(
+        d.lookup(probe)[0], h.lookup(probe)[0], rtol=DERIVED_RTOL, atol=1e-6
     )
     np.testing.assert_array_equal(h.lookup(probe)[1], np.asarray(d.lookup(probe)[1]))
-    np.testing.assert_allclose(
-        h.priority(probe, steps + 3),
-        np.asarray(d.priority(probe, steps + 3)),
-        rtol=1e-5,
+    assert_ema_close(
+        d.priority(probe, steps + 3), h.priority(probe, steps + 3),
+        rtol=DERIVED_RTOL,
     )
 
 
@@ -350,5 +340,4 @@ def test_property_state_dict_roundtrip(seed):
     h.record(ids, losses, 0)
     d.record(ids, losses, 0)
     h2 = dl.DeviceLedger.from_host(h).to_host()
-    for k, v in h.state_dict().items():
-        np.testing.assert_allclose(h2.state_dict()[k], v, rtol=1e-6)
+    assert_ledger_states_close(h2.state_dict(), h.state_dict())

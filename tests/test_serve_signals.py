@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from _ledger_parity import assert_ema_close, assert_ledger_states_close
 from repro.core import device_ledger as dl
 from repro.core.history import (
     AUX_CHANNELS,
@@ -90,12 +91,7 @@ def test_signal_record_parity_host_device():
            lambda i, l, s, g: d.record(i, l, s, signals=g))
     hs, ds = h.state_dict(), d.state_dict()
     assert set(hs) == set(ds) and "sig" in hs
-    for k in hs:
-        if k in ("ema", "sig"):  # XLA may fuse the EMA into an FMA: 1 ulp
-            np.testing.assert_allclose(hs[k], np.asarray(ds[k]),
-                                       rtol=1e-6, err_msg=k)
-        else:
-            np.testing.assert_array_equal(hs[k], np.asarray(ds[k]), err_msg=k)
+    assert_ledger_states_close(hs, {k: np.asarray(v) for k, v in ds.items()})
 
 
 def test_lookup_signals_parity_and_unseen_zero():
@@ -106,8 +102,8 @@ def test_lookup_signals_parity_and_unseen_zero():
     ids = np.concatenate([np.arange(0, 40), [10_001, 10_002]])  # + unseen
     eh, sh, nh = h.lookup_signals(ids)
     ed, sd, nd = d.lookup_signals(ids)
-    np.testing.assert_allclose(eh, np.asarray(ed), rtol=1e-6)
-    np.testing.assert_allclose(sh, np.asarray(sd), rtol=1e-6)
+    assert_ema_close(eh, ed)
+    assert_ema_close(sh, sd)
     np.testing.assert_array_equal(nh, np.asarray(nd))
     assert sh.shape == (len(ids), N_AUX)
     assert (sh[~nh] == 0).all()  # unseen rows answer zero signal

@@ -40,10 +40,11 @@ def schedule():
              rs.integers(0, cfg.vocab_size, GEN))
             for _ in range(2 * SLOTS)]
 
-def run(mesh, route):
+def run(mesh, route, **kw):
     rec = OutcomeRecorder(SLOTS, GEN, cfg.vocab_size, lcfg,
                           ledger="device", mesh=mesh, route=route)
-    eng = Engine(cfg, params, rec, slots=SLOTS, max_prompt=MP, max_gen=GEN)
+    eng = Engine(cfg, params, rec, slots=SLOTS, max_prompt=MP, max_gen=GEN,
+                 **kw)
     ids = [eng.submit(p, max_new=g, labels=l[:g]) for p, g, l in schedule()]
     eng.run(max_steps=500)
     assert eng.stats()["in_flight"] == 0, eng.stats()
@@ -72,6 +73,22 @@ assert (sd_r["owner"][slots] == np.asarray(ids)).all()
 led = eng_routed._rstate.ledger
 shardings = {str(d.sharding.spec) for d in (led.ema, led.owner)}
 assert shardings == {"PartitionSpec('data',)"}, shardings
+
+# PAGED KV cache on the routed 4-shard mesh: same schedule through the
+# page pool (page_size=1 so the pool tokens == max_seq exactly) must be
+# bit-identical to the dense routed run — tokens AND ledger — and drain
+# every page back to the pool
+eng_paged, ids3 = run(mesh, route=True, page_size=1)
+assert ids == ids3
+sd_p = eng_paged.ledger_state_dict()
+for k in ("ema", "count", "last_seen", "owner"):
+    np.testing.assert_array_equal(np.asarray(sd_p[k]), np.asarray(sd_r[k]),
+                                  err_msg="paged-" + k)
+for iid in eng_routed.finished:
+    np.testing.assert_array_equal(eng_routed.finished[iid],
+                                  eng_paged.finished[iid], err_msg=str(iid))
+stp = eng_paged.stats()
+assert stp["pages_free"] == stp["pages_total"], stp
 
 # LATE-outcome delivery on the routed mesh, with the compressed topk
 # retention: deliver_outcome routes each delivered row through
