@@ -43,9 +43,14 @@ _UP_GOOD = ("tok_per_s", "ratio", "hit", "accuracy", "max_slots")
 # named traffic_ratio_vs_naive is NOT an exact match and stays a metric);
 # "vocab"/"topk" key the serving retained-memory rows (bytes_per_slot and
 # max_slots_per_gib are the metrics there: a bytes_per_slot increase or a
-# max_slots_per_gib drop flags a retained-outcome memory regression)
+# max_slots_per_gib drop flags a retained-outcome memory regression);
+# "shards"/"cf" (plus the non-numeric exchange cell) key the routed-ledger
+# crossover rows, whose metric bytes_per_op matches no _UP_GOOD fragment
+# and so regresses UP — more exchange bytes per routed op flags a comms
+# regression, the direction the route[a2a] rows exist to guard
 _KEY_COLS = ("n", "capacity", "batch", "slots", "gen", "size", "steps",
-             "seq", "shape", "ratio", "vocab", "topk", "policy", "ctx")
+             "seq", "shape", "ratio", "vocab", "topk", "policy", "ctx",
+             "shards", "cf", "exchange")
 
 
 def parse_tables(text: str) -> dict[tuple, dict[str, float]]:

@@ -121,6 +121,25 @@ def main(fast: bool = False) -> list[str]:
             f"kernel,ledger_scatter,C{cap}xB{b},{ms:.2f},"
             f"{var}(tiles={tiles};work/item=1/{tiles})"
         )
+    # ledger lookup: gather (VPU row-select) vs the one-hot MXU matmul
+    # variant — bit-identical results, ratio >1 means the matmul wins
+    # (expected on MXU hardware at small batch; on CPU the gather usually
+    # does). Both paths jitted, same table/ids.
+    from repro.core.device_ledger import lookup as led_lookup, record as led_record
+
+    b = 256
+    ids = jax.random.randint(jax.random.key(7), (b,), 0, 4 * cap, jnp.int32)
+    st_l = jax.jit(
+        lambda st, i, l: led_record(lcfg, st, i, l, 1)
+    )(init_state(lcfg), ids, jnp.ones((b,)))
+    f_g = jax.jit(lambda st, i: led_lookup(st, i, variant="gather")[0])
+    f_o = jax.jit(lambda st, i: led_lookup(st, i, variant="onehot")[0])
+    ms_g = _time(f_g, st_l, ids)
+    ms_o = _time(f_o, st_l, ids)
+    out.append(
+        f"kernel,ledger_lookup_onehot,C{cap}xB{b},{ms_o:.2f},"
+        f"{ms_g / max(ms_o, 1e-9):.2f}"
+    )
     # ssd: XLA chunked vs sequential-recurrence cost
     bsz, s, h, p, g, n = 2, 2048, 8, 64, 1, 64
     ks = jax.random.split(jax.random.key(0), 5)

@@ -181,23 +181,60 @@ def bench_ledger_signals(capacity: int, batch: int, trials: int) -> float:
                               trials)
 
 
-def bench_ledger_routed(capacity: int, batch: int, trials: int) -> float:
+def bench_ledger_routed(
+    capacity: int, batch: int, trials: int, exchange: str = "gather"
+) -> float:
     """The routed sharded path (shard_map + cross-shard exchange before
     the table visit). Off a multi-chip mesh the exchange degenerates to
     identity, so this times the routing machinery's overhead, not a
     network; the row exists to keep the routed code path exercised and
-    its dispatch cost visible."""
+    its dispatch cost visible. ``exchange="a2a"`` times the
+    capacity-factor all_to_all dispatch instead (binning + send-buffer
+    scatter + overflow cond); the byte win itself is analytic — see
+    ``_route_crossover_rows``."""
     from repro.core.history import HistoryConfig
     from repro.distributed.ledger import sharded_ledger_ops
     from repro.launch.mesh import make_elastic_mesh
 
     cfg = HistoryConfig(capacity=capacity)
-    ops = sharded_ledger_ops(make_elastic_mesh(), cfg, ("data",), route=True)
+    ops = sharded_ledger_ops(make_elastic_mesh(), cfg, ("data",),
+                             route=True, exchange=exchange)
     step_fn = jax.jit(
         lambda st, i, l, s: ops.record_priority(st, i, l, s),
         donate_argnums=(0,),
     )
     return _timed_ledger_loop(step_fn, ops.init(), capacity, batch, trials)
+
+
+def _route_crossover_rows() -> list[str]:
+    """route[gather] vs route[a2a] exchange bytes per routed ledger op,
+    swept over shards x batch x capacity_factor (analytic: CPU benches
+    have no real interconnect; the model in ``exchange_bytes_per_op``
+    counts both all_to_all hops against the two all_gather hops). The
+    crossover rule is cf < shards, so a2a wins everywhere that routing
+    matters; the in-bench assert pins the ISSUE acceptance point (a2a
+    strictly fewer bytes at S=4 for every swept batch/cf)."""
+    from repro.distributed.ledger import exchange_bytes_per_op
+
+    out = ["table,path,exchange,shards,batch,cf,bytes_per_op"]
+    for shards in (2, 4, 8, 16):
+        for batch in (64, 256):
+            g = exchange_bytes_per_op("gather", shards, batch)
+            out.append(
+                f"ledger,route[gather],gather,{shards},{batch},0,{g}"
+            )
+            for cf in (1.0, 1.25, 2.0):
+                a = exchange_bytes_per_op("a2a", shards, batch,
+                                          capacity_factor=cf)
+                out.append(
+                    f"ledger,route[a2a],a2a,{shards},{batch},{cf},{a}"
+                )
+                if shards == 4:
+                    assert a < g, (
+                        f"a2a must move strictly fewer bytes at S=4: "
+                        f"cf={cf} batch={batch} a2a={a} gather={g}"
+                    )
+    return out
 
 
 def main_ledger(fast: bool = False) -> list[str]:
@@ -214,12 +251,15 @@ def main_ledger(fast: bool = False) -> list[str]:
          lambda: bench_ledger_signals(capacity, batch, trials)),
         ("device[routed]",
          lambda: bench_ledger_routed(capacity, batch, trials)),
+        ("device[routed:a2a]",
+         lambda: bench_ledger_routed(capacity, batch, trials, "a2a")),
         (f"pallas[{pallas_impl}]",
          lambda: bench_ledger_device(capacity, batch,
                                      max(3, trials // 10), pallas_impl)),
     ]
     for name, fn in rows:
         out.append(f"ledger,{name},{capacity},{batch},{fn():.1f}")
+    out.extend(_route_crossover_rows())
     return out
 
 

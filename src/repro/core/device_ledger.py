@@ -94,12 +94,24 @@ def slot_for_jnp(ids: Array, capacity: int) -> Array:
     return (h & jnp.uint32(capacity - 1)).astype(I32)
 
 
-def _winner_mask(slots: Array, capacity: int) -> Array:
+def _winner_mask(
+    slots: Array, capacity: int, order: Optional[Array] = None
+) -> Array:
     """True for the last batch item targeting each slot (numpy fancy-index
     semantics: with duplicate slots the last write wins, deterministically —
     plain ``.at[].set`` with duplicates is unspecified in XLA). Items whose
-    slot is already OOB (masked-out writes) never win."""
-    order = jnp.arange(slots.shape[0], dtype=I32)
+    slot is already OOB (masked-out writes) never win.
+
+    ``order`` (i32 [B], optional) overrides the in-batch position as the
+    winner key: the item with the LARGEST order value wins its slot. The
+    routed all_to_all exchange uses this to record a batch that arrives
+    re-binned (a2a-received items + overflow-fallback items, concatenated)
+    under the ORIGINAL global batch order, keeping the write bit-identical
+    to recording the un-binned batch. Order keys must be unique among
+    items that can share a slot.
+    """
+    if order is None:
+        order = jnp.arange(slots.shape[0], dtype=I32)
     last = jnp.full((capacity,), -1, I32).at[slots].max(order, mode="drop")
     return (slots < capacity) & (last[slots] == order)
 
@@ -112,6 +124,7 @@ def record(
     step,
     valid: Optional[Array] = None,
     signals: Optional[Array] = None,
+    order: Optional[Array] = None,
 ) -> LedgerState:
     """Pure scatter-EMA write; semantics identical to ``LossHistory.record``.
 
@@ -121,6 +134,13 @@ def record(
     "record only the fresh per-example losses" at train time and for the
     routed sharded ledger, where each shard records only the ids homed to
     it out of a globally gathered batch).
+
+    ``order`` (i32 [B], optional) overrides the in-batch position as the
+    last-write-wins key (see ``_winner_mask``): the all_to_all exchange
+    records items out of their global batch order and passes the global
+    indices here so duplicate-slot resolution stays bit-identical to the
+    single global table. The per-item EMA/count math is elementwise, so
+    only the winner choice depends on it.
 
     ``signals`` (optional [B, N_AUX] f32, ``history.AUX_CHANNELS`` order)
     EMAs the auxiliary channels under the same decay/ownership rules.
@@ -148,7 +168,7 @@ def record(
         # invalid items hash OOB: dropped by the scatter AND by the winner
         # computation (a masked write must not shadow a valid one)
         slots = jnp.where(jnp.asarray(valid, bool), slots, state.capacity)
-    keep = _winner_mask(slots, state.capacity)
+    keep = _winner_mask(slots, state.capacity, order=order)
     tgt = jnp.where(keep, slots, state.capacity)  # OOB scatters are dropped
     step32 = jnp.asarray(step).astype(I32)
     return LedgerState(
@@ -162,12 +182,40 @@ def record(
     )
 
 
-def lookup(state: LedgerState, ids: Array) -> tuple[Array, Array]:
-    """Hash-probe read -> (ema_loss f32, seen_mask bool)."""
+LOOKUP_VARIANTS = ("gather", "onehot")
+
+
+def lookup(
+    state: LedgerState, ids: Array, variant: str = "gather"
+) -> tuple[Array, Array]:
+    """Hash-probe read -> (ema_loss f32, seen_mask bool).
+
+    ``variant`` selects how the EMA column is read:
+
+    * ``"gather"`` — ``state.ema[slots]``, a [B]-row gather. On TPU this
+      lowers to VPU dynamic-slice/select work proportional to B*C.
+    * ``"onehot"`` — ``one_hot(slots, C) @ state.ema``, the same read as
+      one [B, C] x [C] MXU matmul (the ROADMAP "replace VPU-select
+      gathers with one-hot matmuls" item). Bit-identical to the gather:
+      each one-hot row has exactly one 1.0, so every product term is
+      either the exact table value or exactly 0.0 and float addition of
+      zeros is exact. The ``owner`` probe (int compare) stays a gather —
+      only the f32 column rides the MXU.
+    """
+    if variant not in LOOKUP_VARIANTS:
+        raise ValueError(f"lookup variant {variant!r} not in "
+                         f"{LOOKUP_VARIANTS}")
     ids = jnp.asarray(ids).astype(I32)
     slots = slot_for_jnp(ids, state.capacity)
     seen = state.owner[slots] == ids
-    return jnp.where(seen, state.ema[slots], 0.0).astype(F32), seen
+    if variant == "onehot":
+        oh = (
+            slots[:, None] == jnp.arange(state.capacity, dtype=I32)[None, :]
+        ).astype(F32)
+        ema = oh @ state.ema
+    else:
+        ema = state.ema[slots]
+    return jnp.where(seen, ema, 0.0).astype(F32), seen
 
 
 def lookup_signals(
@@ -312,7 +360,7 @@ class DeviceLedger:
         self.cfg = cfg
         self.state = init_state(cfg)
         self._record = jax.jit(partial(record, cfg), donate_argnums=(0,))
-        self._lookup = jax.jit(lookup)
+        self._lookup = jax.jit(lookup, static_argnames=("variant",))
         self._lookup_signals = jax.jit(lookup_signals)
         self._priority = jax.jit(partial(priority, cfg))
 
@@ -323,8 +371,8 @@ class DeviceLedger:
             self.state, ids, losses, step, valid, signals
         )
 
-    def lookup(self, ids) -> tuple[Array, Array]:
-        return self._lookup(self.state, ids)
+    def lookup(self, ids, variant: str = "gather") -> tuple[Array, Array]:
+        return self._lookup(self.state, ids, variant=variant)
 
     def lookup_signals(self, ids) -> tuple[Array, Array, Array]:
         return self._lookup_signals(self.state, ids)

@@ -54,6 +54,8 @@ def build_engine(args, cfg, params):
         ledger=args.ledger,
         mesh=mesh,
         route=args.ledger_route,
+        exchange=args.ledger_exchange,
+        capacity_factor=args.capacity_factor,
         retention=args.retain,
         topk=args.topk,
     )
@@ -161,6 +163,16 @@ def main(argv=None) -> int:
                     help="shard the device ledger over the mesh and route "
                          "each record to the shard owning its global slot "
                          "(sharded_ledger_ops(route=True) inside the step)")
+    ap.add_argument("--ledger-exchange", default="gather",
+                    choices=("gather", "a2a"),
+                    help="routed exchange realization: all_gather+home-mask "
+                         "(O(shards*batch) bytes) or capacity-factor "
+                         "all_to_all with exact overflow fallback "
+                         "(O(batch*cf) bytes); results are bit-identical")
+    ap.add_argument("--capacity-factor", type=float, default=1.25,
+                    help="a2a send-buffer slack: per-destination capacity = "
+                         "ceil(batch*cf/shards); items past it take the "
+                         "exact fallback round (counted in a2a_overflow)")
     ap.add_argument("--ledger-out", default="",
                     help="save the ledger state_dict as .npz (interchange "
                          "format shared by host and device ledgers and by "
@@ -240,6 +252,8 @@ def main(argv=None) -> int:
             waves=waves,
             ledger=args.ledger,
             routed=bool(args.ledger_route),
+            exchange=args.ledger_exchange if args.ledger_route else "none",
+            capacity_factor=args.capacity_factor,
             shards=shards,
             hit_rate=float(np.asarray(seen).mean()),
             outcome_delay=args.outcome_delay,

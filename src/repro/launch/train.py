@@ -114,6 +114,16 @@ def main(argv=None) -> int:
                          "ledger: exchange each id to the shard owning its "
                          "global slot before record/lookup, for feeds that "
                          "do not pin instances to a data shard")
+    ap.add_argument("--ledger-exchange", default="gather",
+                    choices=("gather", "a2a"),
+                    help="routed exchange realization: all_gather+home-mask "
+                         "(O(shards*batch) bytes) or capacity-factor "
+                         "all_to_all with exact overflow fallback "
+                         "(O(batch*cf) bytes); results are bit-identical")
+    ap.add_argument("--capacity-factor", type=float, default=1.25,
+                    help="a2a send-buffer slack: per-destination capacity = "
+                         "ceil(batch*cf/shards); items past it take the "
+                         "exact fallback round (counted in a2a_overflow)")
     ap.add_argument("--json-out", default="",
                     help="write a run summary (losses, step cost) as JSON")
     ap.add_argument("--instance-pool", type=int, default=0,
@@ -208,8 +218,11 @@ def main(argv=None) -> int:
         if single_device:
             led_state = dledger.init_state(lcfg)
         else:
-            led_ops = sharded_ledger_ops(mesh, lcfg, rules.batch_axes,
-                                         route=args.ledger_route)
+            led_ops = sharded_ledger_ops(
+                mesh, lcfg, rules.batch_axes, route=args.ledger_route,
+                exchange=args.ledger_exchange,
+                capacity_factor=args.capacity_factor,
+            )
             led_state = led_ops.init()
         if args.ledger_in:
             led_state = load_device_sd(dict(np.load(args.ledger_in)))
@@ -263,11 +276,14 @@ def main(argv=None) -> int:
         )
         policy = get_policy(args.policy)
         if led_ops:
-            led_record = led_ops.record
+            def led_record(lstate, ids, losses, step, valid):
+                return led_ops.record(lstate, ids, losses, step, valid,
+                                      return_stats=True)
         else:
             def led_record(lstate, ids, losses, step, valid):
-                return dledger.record(lcfg, lstate, ids, losses, step,
-                                      valid=valid)
+                st = dledger.record(lcfg, lstate, ids, losses, step,
+                                    valid=valid)
+                return st, {"a2a_overflow": jnp.zeros((), jnp.int32)}
 
         def step_with_ledger(state, lstate, batch, rng):
             """Ledger probe -> OBFTF step -> ledger write, one jit, zero
@@ -291,7 +307,7 @@ def main(argv=None) -> int:
             # --recycle that is the backward subset — replayed records are
             # never re-recorded as observations (which would fake
             # last_seen and collapse the signal toward its own echo).
-            lstate = led_record(
+            lstate, lstats = led_record(
                 lstate,
                 ids,
                 metrics["per_example_loss"],
@@ -299,7 +315,8 @@ def main(argv=None) -> int:
                 metrics["per_example_fresh"],
             )
             metrics = dict(metrics, ledger_hits=jnp.mean(
-                seen.astype(jnp.float32)))
+                seen.astype(jnp.float32)),
+                a2a_overflow=lstats["a2a_overflow"])
             # the per-example arrays exist for the ledger write above;
             # don't ship [batch] arrays to the host with the scalars.
             for k in ("per_example_loss", "per_example_fresh"):
@@ -318,6 +335,7 @@ def main(argv=None) -> int:
     losses_log = []
     cost_log = []
     hits_log = []
+    a2a_overflow = 0  # items that took the a2a exact fallback round
     with use_rules(mesh, rules):
         for step in range(start_step, args.steps):
             t0 = time.time()
@@ -353,6 +371,7 @@ def main(argv=None) -> int:
                     )
             if use_device_ledger:
                 hits_log.append(float(metrics["ledger_hits"]))
+                a2a_overflow += int(metrics["a2a_overflow"])
             elif args.recycle:
                 hits_log.append(float(raw.get("ledger_hit_rate", 0.0)))
             losses_log.append(float(metrics["loss"]))
@@ -397,6 +416,10 @@ def main(argv=None) -> int:
             "recycle": bool(args.recycle),
             "policy": args.policy,
             "ledger": args.ledger,
+            "exchange": (args.ledger_exchange if args.ledger_route
+                         else "none"),
+            "capacity_factor": args.capacity_factor,
+            "a2a_overflow": a2a_overflow,
             "stragglers": watchdog.flagged,
             "ledger_hits_first": hits_log[0] if hits_log else None,
             "ledger_hits_mean": float(np.mean(hits_log)) if hits_log else None,

@@ -300,6 +300,9 @@ class Engine:
         self.evicted = 0
         self.steps_run = 0
         self.missed_outcomes = 0
+        # total items that missed the a2a send capacity and took the exact
+        # overflow fallback round (0 unless the recorder routes exchange="a2a")
+        self.a2a_overflow = 0
 
         # sharded recorder: everything the guarded fused step touches must
         # already live on the mesh (params + engine state replicated, the
@@ -440,6 +443,7 @@ class Engine:
             "loss_valid": info["valid"],
             "topk_miss": info["miss"],
             "n_recorded": rstate.n_recorded,
+            "a2a_overflow": info["a2a_overflow"],
         }
         return new_es, rstate, metrics
 
@@ -723,6 +727,7 @@ class Engine:
         self._last_metrics = metrics
         self.steps_run += 1
         self.generated_tokens += int(metrics["decoding"].sum())
+        self.a2a_overflow += int(metrics["a2a_overflow"])
         if self.pool is not None:
             # host mirror of the device pos vector (what _grow_pages keys
             # on): advances exactly where the step decoded
@@ -752,6 +757,7 @@ class Engine:
             "generated_tokens": self.generated_tokens,
             "recorded": int(jax.device_get(self._rstate.n_recorded)),
             "topk_misses": int(jax.device_get(self._rstate.n_miss)),
+            "a2a_overflow": self.a2a_overflow,
             "missed_outcomes": self.missed_outcomes,
             "queued": len(self._queue),
             "in_flight": len(self._slot_of),

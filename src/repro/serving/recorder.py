@@ -193,6 +193,8 @@ class OutcomeRecorder:
         mesh: Optional[Mesh] = None,
         dp_axes: Sequence[str] = ("data",),
         route: bool = False,
+        exchange: str = "gather",
+        capacity_factor: float = 1.25,
         logits_dtype=jnp.float32,
         retention: str = "full",
         topk: int = 64,
@@ -214,7 +216,10 @@ class OutcomeRecorder:
         self.ops: Optional[ShardedLedgerOps] = None
         self.host_history: Optional[LossHistory] = None
         if ledger == "device" and mesh is not None:
-            self.ops = sharded_ledger_ops(mesh, cfg, dp_axes, route=route)
+            self.ops = sharded_ledger_ops(
+                mesh, cfg, dp_axes, route=route, exchange=exchange,
+                capacity_factor=capacity_factor,
+            )
             if slots % self.ops.shards:
                 raise ValueError(
                     f"engine slots {slots} not divisible by "
@@ -423,11 +428,14 @@ class OutcomeRecorder:
             bidx, jnp.where(valid, pos, g)
         ].set(True, mode="drop")
         ledger = state.ledger
+        a2a_overflow = jnp.zeros((), I32)
         if ledger is not None:
             if self.ops is not None:
-                ledger = self.ops.record(
-                    ledger, inst, loss, step, valid, signals=signals
+                ledger, lstats = self.ops.record(
+                    ledger, inst, loss, step, valid, signals=signals,
+                    return_stats=True,
                 )
+                a2a_overflow = lstats["a2a_overflow"]
             else:
                 ledger = dledger.record(
                     self.cfg, ledger, inst, loss, step, valid=valid,
@@ -446,6 +454,7 @@ class OutcomeRecorder:
         return new, {
             "loss": loss, "entropy": entropy, "margin": margin,
             "valid": valid, "pending": pending, "miss": miss,
+            "a2a_overflow": a2a_overflow,
         }
 
     # -- host interchange ----------------------------------------------------

@@ -1,0 +1,259 @@
+"""Capacity-factor all_to_all ledger routing: binning properties, the
+exchange bytes model, and full five-op a2a <-> gather <-> global parity
+on a real 4-shard mesh (subprocess, the ``test_routed_ledger.py``
+pattern).
+
+The a2a exchange is a perf realization of the SAME routed semantics —
+never a semantics change: GShard-style cumsum position assignment bins
+each shard's items into capacity-bounded send buffers, one
+``lax.all_to_all`` ships them to their home shards, the table op runs
+there, a second all_to_all returns the answers, and items past capacity
+take an exact residual all_gather round (counted in ``a2a_overflow``).
+These tests pin the host-side pieces by property and the device pipeline
+by bit-parity (ints exact, EMA per the ``tests/_ledger_parity.py``
+convention).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.distributed.ledger import (
+    a2a_capacity,
+    bin_by_home,
+    exchange_bytes_per_op,
+)
+
+
+# ---------------------------------------------------------------------------
+# binning / capacity assignment (host-checkable properties)
+# ---------------------------------------------------------------------------
+
+
+def _bin(home, n_shards, capacity, active=None):
+    import jax.numpy as jnp
+
+    pos, kept, overflow = bin_by_home(
+        jnp.asarray(home, jnp.int32), n_shards, capacity,
+        active=None if active is None else jnp.asarray(active, bool),
+    )
+    return np.asarray(pos), np.asarray(kept), np.asarray(overflow)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    home=st.lists(st.integers(0, 7), min_size=1, max_size=64),
+    n_shards=st.sampled_from([1, 2, 4, 8]),
+    capacity=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bin_by_home_properties(home, n_shards, capacity, seed):
+    """No item lost or duplicated; positions respect capacity; the kept
+    set is invariant to batch permutation as a SET union with overflow
+    (which items overflow may change — earlier items win capacity — but
+    kept + overflow must always partition the active set)."""
+    home = np.asarray(home) % n_shards
+    pos, kept, overflow = _bin(home, n_shards, capacity)
+
+    # partition: every item is kept xor overflow, none both, none neither
+    assert not (kept & overflow).any()
+    assert (kept | overflow).all()
+
+    # capacity + uniqueness: per home shard, kept positions are exactly
+    # 0..k-1 for some k <= capacity (each send-buffer row used once)
+    for s in range(n_shards):
+        p = np.sort(pos[kept & (home == s)])
+        assert len(p) <= capacity
+        np.testing.assert_array_equal(p, np.arange(len(p)))
+
+    # permutation invariance of the partition: permuting the batch
+    # permutes kept|overflow identically (the per-home kept COUNT is
+    # min(count, capacity) either way), so the union equals the batch
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(home))
+    pos_p, kept_p, overflow_p = _bin(home[perm], n_shards, capacity)
+    for s in range(n_shards):
+        assert (kept_p & (home[perm] == s)).sum() == (
+            kept & (home == s)
+        ).sum()
+    assert (kept_p | overflow_p).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    home=st.lists(st.integers(0, 3), min_size=1, max_size=48),
+    mask=st.lists(st.booleans(), min_size=1, max_size=48),
+    capacity=st.integers(1, 8),
+)
+def test_bin_by_home_active_mask(home, mask, capacity):
+    """Inactive items neither claim capacity nor overflow: the partition
+    covers exactly the active set and capacity serves active items only."""
+    n = min(len(home), len(mask))
+    home, active = np.asarray(home[:n]), np.asarray(mask[:n])
+    pos, kept, overflow = _bin(home, 4, capacity, active=active)
+    assert not (kept & ~active).any()
+    assert not (overflow & ~active).any()
+    np.testing.assert_array_equal(kept | overflow, active)
+    for s in range(4):
+        k = (kept & (home == s)).sum()
+        assert k == min((active & (home == s)).sum(), capacity)
+
+
+def test_a2a_capacity():
+    assert a2a_capacity(256, 4, 1.25) == 80  # ceil(256*1.25/4)
+    assert a2a_capacity(8, 4, 1.25) == 3
+    assert a2a_capacity(2, 4, 0.125) == 1  # floors at 1
+    with pytest.raises(ValueError):
+        a2a_capacity(256, 4, 0.0)
+
+
+def test_exchange_bytes_crossover():
+    """a2a moves strictly fewer bytes than gather iff cf < shards, and
+    the overflow fallback adds exactly one gather round."""
+    for shards in (2, 4, 8, 16):
+        for batch in (64, 256):
+            g = exchange_bytes_per_op("gather", shards, batch)
+            for cf in (1.0, 1.25, 2.0):
+                a = exchange_bytes_per_op("a2a", shards, batch,
+                                          capacity_factor=cf)
+                assert (a < g) == (cf < shards), (shards, batch, cf)
+                ovf = exchange_bytes_per_op("a2a", shards, batch,
+                                            capacity_factor=cf,
+                                            overflow=True)
+                assert ovf == a + g
+    with pytest.raises(ValueError):
+        exchange_bytes_per_op("psum", 4, 64)
+
+
+# ---------------------------------------------------------------------------
+# 4-shard device parity: every op, both id distributions
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core.history import HistoryConfig, slot_for
+from repro.core.device_ledger import DeviceLedger
+from repro.distributed.ledger import sharded_ledger_ops, state_dict_of
+
+SHARDS, B, STEPS = 4, 32, 5
+CFG = HistoryConfig(capacity=4096, decay=0.7)
+mesh = Mesh(np.asarray(jax.devices()).reshape(SHARDS), ("data",))
+LOCAL = CFG.capacity // SHARDS
+rng = np.random.default_rng(0)
+
+# id pools by home shard, so streams can be constructed balanced (exactly
+# B/SHARDS ids per home in every shard's local batch -> overflow
+# statically impossible at cf >= 1) or skewed (all home to shard 0)
+cand = np.arange(1, 400000, dtype=np.int64)
+homes = slot_for(cand, CFG.capacity) // LOCAL
+pools = [cand[homes == s] for s in range(SHARDS)]
+
+def batch(skew):
+    if skew:
+        ids = rng.choice(pools[0][:800], size=B)
+    else:
+        per = B // SHARDS
+        ids = np.concatenate([rng.choice(p[:800], size=per) for p in pools])
+        # each LOCAL batch must be balanced: interleave so every
+        # contiguous B/SHARDS segment holds one id per home shard
+        ids = ids.reshape(SHARDS, per).T.reshape(-1)
+    return (ids, rng.normal(2, 1, size=B).astype(np.float32),
+            rng.random(B) > 0.15,
+            rng.random((B, 2)).astype(np.float32))
+
+def assert_close(a, b, what, exact):
+    a, b = np.asarray(a), np.asarray(b)
+    if exact or a.dtype.kind in "biu":
+        np.testing.assert_array_equal(a, b, err_msg=what)
+    else:  # EMA-carrying floats: the _ledger_parity.py FMA tolerance
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=0, err_msg=what)
+
+for skew in (False, True):
+    host = DeviceLedger(CFG)
+    gops = sharded_ledger_ops(mesh, CFG, ("data",), route=True)
+    aops = sharded_ledger_ops(mesh, CFG, ("data",), route=True,
+                              exchange="a2a", capacity_factor=1.25)
+    gst, ast = gops.init(), aops.init()
+    ovf = 0
+    for t in range(STEPS):
+        ids, losses, valid, sig = batch(skew)
+        i32, l, v = (jnp.asarray(ids.astype(np.int32)), jnp.asarray(losses),
+                     jnp.asarray(valid))
+        s = jnp.asarray(sig)
+        host.record(ids, losses, t, valid=valid, signals=sig)
+        gst = gops.record(gst, i32, l, t, valid=v, signals=s)
+        ast, stats = aops.record(ast, i32, l, t, valid=v, signals=s,
+                                 return_stats=True)
+        ovf += int(stats["a2a_overflow"])
+        # every read op answers identically through either exchange
+        for (ge, gs_), (ae, as_) in (
+            (gops.lookup(gst, i32), aops.lookup(ast, i32)),
+        ):
+            assert_close(ae, ge, "lookup ema", False)
+            assert_close(as_, gs_, "lookup seen", True)
+        ge, gg, gn = gops.lookup_signals(gst, i32)
+        ae, ag, an = aops.lookup_signals(ast, i32)
+        assert_close(ae, ge, "sig ema", False)
+        assert_close(ag, gg, "sig channels", False)
+        assert_close(an, gn, "sig seen", True)
+        assert_close(aops.priority(ast, i32, t), gops.priority(gst, i32, t),
+                     "priority", False)
+    # a2a table == gather table == single global table
+    hd, gd, ad = host.state_dict(), state_dict_of(gst), state_dict_of(ast)
+    for k in ("count", "last_seen", "owner"):
+        assert_close(ad[k], gd[k], f"skew={skew} a2a/gather {k}", True)
+        assert_close(ad[k], hd[k], f"skew={skew} a2a/host {k}", True)
+    for k in ("ema", "sig"):
+        assert_close(ad[k], gd[k], f"skew={skew} a2a/gather {k}", False)
+        assert_close(ad[k], hd[k], f"skew={skew} a2a/host {k}", False)
+    # balanced construction at cf >= 1: zero overflow, by construction;
+    # all-one-home skew MUST overflow (32 items, cap=10 per destination)
+    assert (ovf > 0) == skew, (ovf, skew)
+    print(f"skew={skew}: five-op parity OK, overflow={ovf}")
+
+# fused record_priority through the overflow path (the op trains use)
+host = DeviceLedger(CFG)
+gops = sharded_ledger_ops(mesh, CFG, ("data",), route=True)
+aops = sharded_ledger_ops(mesh, CFG, ("data",), route=True, exchange="a2a")
+gst, ast = gops.init(), aops.init()
+for t in range(STEPS):
+    ids, losses, valid, _ = batch(skew=True)
+    i32, l, v = (jnp.asarray(ids.astype(np.int32)), jnp.asarray(losses),
+                 jnp.asarray(valid))
+    hpri = host.record_priority(ids, losses, t, valid=valid)
+    gst, gpri = gops.record_priority(gst, i32, l, t, valid=v)
+    ast, apri, stats = aops.record_priority(ast, i32, l, t, valid=v,
+                                            return_stats=True)
+    np.testing.assert_allclose(np.asarray(apri), np.asarray(gpri),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(apri), np.asarray(hpri),
+                               rtol=1e-5, atol=1e-6)
+gd, ad = state_dict_of(gst), state_dict_of(ast)
+for k in ("count", "last_seen", "owner"):
+    np.testing.assert_array_equal(ad[k], gd[k], err_msg=k)
+# five compounding record_priority rounds stack EMA-on-EMA: the
+# _ledger_parity.py DERIVED_RTOL convention, not the single-write rtol
+np.testing.assert_allclose(ad["ema"], gd["ema"], rtol=1e-5, atol=0)
+print("A2A-ROUTING-OK")
+"""
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
+if "JAX_PLATFORMS" in os.environ:
+    ENV["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
+CWD = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_a2a_five_op_parity_4shard():
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=600, env=ENV, cwd=CWD,
+    )
+    assert "A2A-ROUTING-OK" in res.stdout, res.stdout + res.stderr

@@ -96,6 +96,47 @@ def test_intra_batch_duplicate_slot_last_write_wins():
     np.testing.assert_allclose(np.asarray(d.lookup(np.asarray([7]))[0]), [9.0])
 
 
+def test_lookup_onehot_variant_bit_identical():
+    """The one-hot MXU-matmul lookup (slots one-hot [B, C] @ ema [C]) is
+    bit-identical to the gather lookup: each row has exactly one 1.0, and
+    adding exact float zeros cannot perturb the selected value. The
+    `seen` probe (owner gather) is shared, so it matches trivially."""
+    _, d, rng = _run_sequence(CFG)
+    probe = _i32(rng.integers(0, 4000, size=256))  # mix of seen/unseen
+    ge, gs = dl.lookup(d.state, probe, variant="gather")
+    oe, os_ = dl.lookup(d.state, probe, variant="onehot")
+    np.testing.assert_array_equal(np.asarray(oe), np.asarray(ge))
+    np.testing.assert_array_equal(np.asarray(os_), np.asarray(gs))
+    # the DeviceLedger wrapper threads the variant through its jit
+    oe2, _ = d.lookup(np.asarray(probe, np.int64), variant="onehot")
+    np.testing.assert_array_equal(np.asarray(oe2), np.asarray(ge))
+    with pytest.raises(ValueError):
+        dl.lookup(d.state, probe, variant="scan")
+
+
+def test_record_order_keys_override_batch_position():
+    """`record(order=)` resolves same-slot duplicates by the caller's
+    keys, not batch position — the hook the a2a exchange uses to keep
+    winner choice in GLOBAL batch order when one slot's items arrive
+    split between the all_to_all buffer and the overflow fallback."""
+    cfg = HistoryConfig(capacity=128, decay=0.5)
+    ids = np.asarray([7, 9, 7, 7], np.int64)
+    losses = np.asarray([1.0, 2.0, 3.0, 9.0], np.float32)
+    # descending keys: the FIRST duplicate is now the winner
+    order = _i32([3, 2, 1, 0])
+    st = dl.record(cfg, dl.init_state(cfg), _i32(ids),
+                   jnp.asarray(losses), 0, order=order)
+    np.testing.assert_allclose(
+        np.asarray(dl.lookup(st, _i32([7]))[0]), [1.0]
+    )
+    # default order reproduces numpy last-write-wins exactly
+    st2 = dl.record(cfg, dl.init_state(cfg), _i32(ids),
+                    jnp.asarray(losses), 0)
+    np.testing.assert_allclose(
+        np.asarray(dl.lookup(st2, _i32([7]))[0]), [9.0]
+    )
+
+
 def test_eviction_resets_count_and_ema():
     """A colliding id evicts the slot owner (lossy-cache semantics) the
     same way on both ledgers."""

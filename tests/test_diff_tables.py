@@ -82,6 +82,31 @@ def test_retained_memory_rows_keyed_and_directed():
     assert not any("retained[full]" in w for w in warns)
 
 
+def test_route_crossover_rows_keyed_and_bytes_down_good():
+    """Routed-ledger crossover rows: ``exchange``/``shards``/``cf`` are
+    config axes (key) so the gather and a2a variants of one sweep point
+    never collapse, and ``bytes_per_op`` regresses UP — a comms-cost
+    increase in the a2a exchange (e.g. a fatter wire item or a cap bug)
+    must warn, a byte reduction must stay quiet."""
+    hdr = "table,path,exchange,shards,batch,cf,bytes_per_op"
+    prev = "\n".join([
+        hdr,
+        "ledger,route[gather],gather,4,64,0,8192",
+        "ledger,route[a2a],a2a,4,64,1.25,2560",
+    ])
+    rows = parse_tables(prev)
+    assert ("ledger", "route[a2a]", "exchange=a2a", "shards=4",
+            "batch=64", "cf=1.25") in rows
+    assert rows[("ledger", "route[a2a]", "exchange=a2a", "shards=4",
+                 "batch=64", "cf=1.25")] == {"bytes_per_op": 2560.0}
+    curr_bad = prev.replace("1.25,2560", "1.25,8192")  # a2a win lost
+    warns, _ = diff(prev, curr_bad, threshold=0.25)
+    assert any("route[a2a]" in w and "bytes_per_op" in w for w in warns)
+    curr_good = prev.replace("1.25,2560", "1.25,2048")  # fewer bytes: fine
+    warns, _ = diff(prev, curr_good, threshold=0.25)
+    assert not warns
+
+
 def test_missing_and_new_rows_reported():
     prev = HDR_SEL + "\nselection,gone,128,1.0,0.1"
     curr = HDR_SEL + "\nselection,new,128,1.0,0.1"

@@ -118,3 +118,26 @@ def test_serve_routed_ledger_matches_single_table(tmp_path):
     assert summary["waves"] >= 3 and summary["routed"]
     assert summary["recorded"] == summary["admitted"] * 6
     assert summary["hit_rate"] == 1.0
+    assert summary["exchange"] == "gather"
+    assert summary["a2a_overflow"] == 0
+
+    # same schedule through the capacity-factor all_to_all exchange: at
+    # the default cf=1.25 the send buffer covers the whole smoke batch,
+    # so the overflow counter must read 0 and the exported table must
+    # match the single-table run (ints bit-exact, EMA to the 1-ulp FMA
+    # rtol — a different collective program, different fusions)
+    a2a_npz = str(tmp_path / "a2a.npz")
+    a2a_json = str(tmp_path / "a2a.json")
+    r3 = _run([*common, "--ledger-route", "--ledger-exchange", "a2a",
+               "--ledger-out", a2a_npz, "--json-out", a2a_json])
+    assert r3.returncode == 0, r3.stdout + r3.stderr
+    c = dict(np.load(a2a_npz))
+    for k in ("count", "last_seen", "owner"):
+        np.testing.assert_array_equal(c[k], b[k], err_msg="a2a-" + k)
+    np.testing.assert_allclose(c["ema"], b["ema"], rtol=1e-6, atol=0,
+                               err_msg="a2a-ema")
+    with open(a2a_json) as f:
+        s3 = json.load(f)
+    assert s3["exchange"] == "a2a" and s3["capacity_factor"] == 1.25
+    assert s3["a2a_overflow"] == 0, s3
+    assert s3["hit_rate"] == 1.0

@@ -35,11 +35,12 @@ GB = SHARDS * LB
 mesh = Mesh(np.asarray(jax.devices()).reshape(SHARDS), ("data",))
 cfg = HistoryConfig(capacity=4096, decay=0.7)
 
-def run(pinned, route):
+def run(pinned, route, exchange="gather", cf=1.25):
     dcfg = DataConfig(GB, 8, 64, instance_pool=POOL, pin_shards=pinned)
     streams = [SyntheticLMStream(dcfg, shard=s, num_shards=SHARDS)
                for s in range(SHARDS)]
-    ops = sharded_ledger_ops(mesh, cfg, ("data",), route=route)
+    ops = sharded_ledger_ops(mesh, cfg, ("data",), route=route,
+                             exchange=exchange, capacity_factor=cf)
     st = ops.init()
     h = LossHistory(cfg)
     rng = np.random.default_rng(0)
@@ -73,6 +74,52 @@ assert unrouted_hits <= 0.05, unrouted_hits
 sd = ops.state_dict(st)
 for k, v in h.state_dict().items():
     np.testing.assert_array_equal(sd[k], v, err_msg=k)
+
+# the a2a exchange (capacity-factor all_to_all dispatch + exact overflow
+# fallback) matches both, to the tests/_ledger_parity.py convention:
+# integer tables bit-exact, EMA tables to the 1-ulp FMA rtol (the a2a
+# program compiles different fusions than the gather one)
+a2a_hits, a2a_ops, a2a_st, _ = run(pinned=False, route=True,
+                                   exchange="a2a")
+assert abs(a2a_hits - routed_hits) <= 1e-9, (a2a_hits, routed_hits)
+sd_a = a2a_ops.state_dict(a2a_st)
+for k, v in h.state_dict().items():
+    if np.issubdtype(np.asarray(v).dtype, np.integer):
+        np.testing.assert_array_equal(sd_a[k], v, err_msg="a2a " + k)
+    else:
+        np.testing.assert_allclose(sd_a[k], v, rtol=1e-6, atol=0,
+                                   err_msg="a2a " + k)
+
+# skewed ids (every id homed to shard 0) overflow any cf < SHARDS send
+# buffer: the fallback round must fire AND keep exact parity with a
+# host ledger fed the same stream
+from repro.core.history import slot_for
+cand = np.arange(1, 200000, dtype=np.int64)
+skew_pool = cand[slot_for(cand, cfg.capacity)
+                 // (cfg.capacity // SHARDS) == 0]
+assert len(skew_pool) >= 500
+ovf_total = 0
+h_skew = LossHistory(cfg)
+a_st = a2a_ops.init()
+rng_s = np.random.default_rng(1)
+for step in range(STEPS):
+    ids = rng_s.choice(skew_pool[:500], size=GB)
+    losses = rng_s.normal(2, 1, size=GB).astype(np.float32)
+    a_st, stats = a2a_ops.record(
+        a_st, jnp.asarray(ids.astype(np.int32)), jnp.asarray(losses),
+        step, return_stats=True,
+    )
+    ovf_total += int(stats["a2a_overflow"])
+    h_skew.record(ids, losses, step)
+assert ovf_total > 0, "skewed ids must force the a2a overflow fallback"
+sd_s = a2a_ops.state_dict(a_st)
+for k, v in h_skew.state_dict().items():
+    if np.issubdtype(np.asarray(v).dtype, np.integer):
+        np.testing.assert_array_equal(sd_s[k], v, err_msg="skew " + k)
+    else:
+        np.testing.assert_allclose(sd_s[k], v, rtol=1e-6, atol=0,
+                                   err_msg="skew " + k)
+print(f"a2a parity OK (skew overflow items={ovf_total})")
 
 # a PINNED multi-shard table checkpoints losslessly: its state_dict is
 # marked (records sit on consumer shards, not hash-home) and loads back

@@ -40,9 +40,10 @@ def schedule():
              rs.integers(0, cfg.vocab_size, GEN))
             for _ in range(2 * SLOTS)]
 
-def run(mesh, route, **kw):
+def run(mesh, route, exchange="gather", cf=1.25, **kw):
     rec = OutcomeRecorder(SLOTS, GEN, cfg.vocab_size, lcfg,
-                          ledger="device", mesh=mesh, route=route)
+                          ledger="device", mesh=mesh, route=route,
+                          exchange=exchange, capacity_factor=cf)
     eng = Engine(cfg, params, rec, slots=SLOTS, max_prompt=MP, max_gen=GEN,
                  **kw)
     ids = [eng.submit(p, max_new=g, labels=l[:g]) for p, g, l in schedule()]
@@ -73,6 +74,38 @@ assert (sd_r["owner"][slots] == np.asarray(ids)).all()
 led = eng_routed._rstate.ledger
 shardings = {str(d.sharding.spec) for d in (led.ema, led.owner)}
 assert shardings == {"PartitionSpec('data',)"}, shardings
+assert eng_routed.stats()["a2a_overflow"] == 0  # gather never overflows
+
+# a2a exchange inside the guarded fused step: same schedule through the
+# capacity-factor all_to_all dispatch must match the single-table run to
+# the tests/_ledger_parity.py convention (ints bit-exact, EMA to the
+# 1-ulp FMA rtol — a different collective program compiles different
+# fusions than the single-device one). cf=4.0 makes each send buffer as
+# large as the local batch (2 slots/shard), so overflow is statically
+# impossible: the counter must read 0.
+eng_a2a, ids4 = run(mesh, route=True, exchange="a2a", cf=4.0)
+assert ids == ids4
+assert eng_a2a.stats()["a2a_overflow"] == 0, eng_a2a.stats()
+sd_a = eng_a2a.ledger_state_dict()
+for k in ("count", "last_seen", "owner"):
+    np.testing.assert_array_equal(np.asarray(sd_a[k]), np.asarray(sd_s[k]),
+                                  err_msg="a2a-" + k)
+np.testing.assert_allclose(np.asarray(sd_a["ema"]), np.asarray(sd_s["ema"]),
+                           rtol=1e-6, atol=0, err_msg="a2a-ema")
+
+# starve the send buffers (cap floors at ONE forwarded record per
+# destination per step): the exact overflow fallback must fire — counted
+# in stats() — and the table must STILL match the single run
+eng_ovf, _ = run(mesh, route=True, exchange="a2a", cf=0.125)
+assert eng_ovf.stats()["a2a_overflow"] > 0, eng_ovf.stats()
+sd_o = eng_ovf.ledger_state_dict()
+for k in ("count", "last_seen", "owner"):
+    np.testing.assert_array_equal(np.asarray(sd_o[k]), np.asarray(sd_s[k]),
+                                  err_msg="ovf-" + k)
+np.testing.assert_allclose(np.asarray(sd_o["ema"]), np.asarray(sd_s["ema"]),
+                           rtol=1e-6, atol=0, err_msg="ovf-ema")
+print(f"a2a overflow counters: cf=4.0 -> 0, "
+      f"cf=0.125 -> {eng_ovf.stats()['a2a_overflow']}")
 
 # PAGED KV cache on the routed 4-shard mesh: same schedule through the
 # page pool (page_size=1 so the pool tokens == max_seq exactly) must be
