@@ -241,6 +241,36 @@ def trend(history_dir: str, curr: str, threshold: float) -> list[str]:
     return warns
 
 
+def emit_metrics(path: str, verdicts: list[tuple[str, str]],
+                 **summary) -> None:
+    """Write the run's verdicts as obs-schema JSONL (``bench_verdict``
+    rows plus one ``bench_summary``), so nightly verdicts land in the
+    same stream shape the drivers' ``--metrics-out`` writes (every line
+    carries ``t``/``seq``/``kind``; see docs/observability.md). Uses
+    :class:`repro.obs.EventLog` when importable (PYTHONPATH=src, as in
+    CI) and a same-schema inline writer otherwise."""
+    try:
+        from repro.obs import EventLog
+    except ImportError:
+        EventLog = None
+    if EventLog is not None:
+        log = EventLog(path)
+        for check, detail in verdicts:
+            log.write("bench_verdict", check=check, detail=detail)
+        log.write("bench_summary", **summary)
+        log.close()
+        return
+    import time
+
+    with open(path, "w", encoding="utf-8") as f:
+        for seq, (check, detail) in enumerate(verdicts):
+            f.write(json.dumps({"t": time.time(), "seq": seq,
+                                "kind": "bench_verdict", "check": check,
+                                "detail": detail}) + "\n")
+        f.write(json.dumps({"t": time.time(), "seq": len(verdicts),
+                            "kind": "bench_summary", **summary}) + "\n")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("prev")
@@ -264,8 +294,13 @@ def main(argv=None) -> int:
                     help="label stored with the history entry (run id/date)")
     ap.add_argument("--history-max", type=int, default=HISTORY_MAX,
                     help="runs retained per table series")
+    ap.add_argument("--emit-metrics", default="",
+                    help="also write the verdicts as obs-schema JSONL "
+                         "(bench_verdict/bench_summary events)")
     args = ap.parse_args(argv)
     curr = open(args.curr).read()
+    warns: list[str] = []
+    twarns: list[str] = []
     lines = ["## Nightly benchmark trend", ""]
     try:
         prev = open(args.prev).read()
@@ -321,6 +356,24 @@ def main(argv=None) -> int:
     if args.summary_out:
         with open(args.summary_out, "a") as f:
             f.write(out + "\n")
+    if args.emit_metrics:
+        verdicts = [
+            ("missing" if w.startswith("MISSING") else "regression", w)
+            for w in warns
+        ]
+        verdicts += [("trend", w) for w in twarns]
+        verdicts += [("policy", w) for w in pwarns]
+        emit_metrics(
+            args.emit_metrics,
+            verdicts,
+            regressions=sum(1 for c, _ in verdicts if c == "regression"),
+            missing=sum(1 for c, _ in verdicts if c == "missing"),
+            trends=len(twarns),
+            policies=len(pwarns),
+            threshold=args.threshold,
+            policy_threshold=args.policy_threshold,
+            label=args.run_label or "unlabeled",
+        )
     return 0  # fail-soft by contract
 
 

@@ -19,7 +19,7 @@ def main() -> int:
     ap.add_argument(
         "--only",
         default="",
-        help="comma-list: fig1,fig2,table3,selection,ledger,serving,"
+        help="comma-list: fig1,fig2,table3,selection,ledger,serving,obs,"
              "kernels,roofline",
     )
     args = ap.parse_args()
@@ -46,6 +46,8 @@ def main() -> int:
          selection_bench.main_ledger),
         ("serving", "Serving engine (continuous batching + record overhead)",
          selection_bench.main_serving),
+        ("obs", "Telemetry overhead (per-step instruments vs fused step)",
+         selection_bench.main_obs),
         ("kernels", "Kernel benchmark", kernel_bench.main),
         ("roofline", "Roofline (from dry-run artifacts)", roofline.main),
     ]

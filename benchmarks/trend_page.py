@@ -1,0 +1,463 @@
+"""Render the committed benchmark history as a static HTML trend page.
+
+    python benchmarks/trend_page.py --history-dir benchmarks/history \
+        --out trend/index.html
+
+Input is the per-table series ``diff_tables.py --update-history`` keeps
+(``BENCH_<table>.json``, oldest run first). Output is ONE self-contained
+HTML file — inline SVG line charts, no external assets, no JS framework —
+published by the nightly workflow as the gh-pages "trend page" artifact.
+
+Chart design (the job is change-over-time, so every chart is a line
+chart): one chart per (table, metric column), one 2px line per row key,
+run index on the x axis. Series colors come from a fixed categorical
+order (color follows the row key, assigned once over the sorted key
+list, never cycled); a chart holds at most MAX_SERIES series and facets
+beyond that. Every chart with >= 2 series carries a legend, every chart
+carries a table-view twin (oldest -> latest with the delta direction
+judged by diff_tables._UP_GOOD and shown as arrow + word, never color
+alone), and a crosshair + tooltip hover layer (values injected with
+textContent — row keys are data, not markup). Light and dark themes are
+both emitted via CSS custom properties (``prefers-color-scheme`` plus a
+``data-theme`` override hook).
+
+An empty or missing history directory renders a page that says so — the
+committed history starts life CI-only (see benchmarks/history/README.md)
+and the page must not fail before the first nightly has run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import html
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from diff_tables import _UP_GOOD, load_history  # noqa: E402
+
+MAX_SERIES = 8  # categorical palette depth; facet past it, never cycle
+
+# Reference palette (validated instance from the dataviz design system:
+# adjacent-pair CVD deltaE 9.1 light / 8.4 dark, normal-vision 19.6/19.3).
+CAT_LIGHT = ("#2a78d6", "#eb6834", "#1baf7a", "#eda100",
+             "#e87ba4", "#008300", "#4a3aa7", "#e34948")
+CAT_DARK = ("#3987e5", "#d95926", "#199e70", "#c98500",
+            "#d55181", "#008300", "#9085e9", "#e66767")
+
+CSS = """
+:root { color-scheme: light dark; }
+body {
+  --surface: #fcfcfb; --ink: #0b0b0b; --ink-2: #52514e; --ink-3: #898781;
+  --grid: #e1e0d9; --baseline: #c3c2b7;
+  --good: #006300; --bad: #d03b3b;
+  %(light_vars)s
+  margin: 0; padding: 24px 32px 64px;
+  background: var(--surface); color: var(--ink);
+  font: 14px/1.45 system-ui, sans-serif;
+}
+@media (prefers-color-scheme: dark) { body:not([data-theme="light"]) {
+  --surface: #1a1a19; --ink: #ffffff; --ink-2: #c3c2b7; --ink-3: #898781;
+  --grid: #2c2c2a; --baseline: #383835;
+  --good: #0ca30c; --bad: #d03b3b;
+  %(dark_vars)s
+} }
+body[data-theme="dark"] {
+  --surface: #1a1a19; --ink: #ffffff; --ink-2: #c3c2b7; --ink-3: #898781;
+  --grid: #2c2c2a; --baseline: #383835;
+  --good: #0ca30c; --bad: #d03b3b;
+  %(dark_vars)s
+}
+h1 { font-size: 20px; margin: 0 0 4px; }
+h2 { font-size: 16px; margin: 40px 0 8px; }
+.sub { color: var(--ink-2); margin: 0 0 8px; }
+.muted { color: var(--ink-3); }
+.chart { margin: 20px 0 4px; max-width: 760px; }
+.chart h3 { font-size: 14px; font-weight: 600; margin: 0 0 2px; }
+.chart .series-note { color: var(--ink-2); font-size: 12px; margin: 0; }
+svg { display: block; overflow: visible; }
+svg text { fill: var(--ink-2); font: 11px system-ui, sans-serif; }
+.grid line { stroke: var(--grid); stroke-width: 1; }
+.baseline { stroke: var(--baseline); stroke-width: 1; }
+.line { fill: none; stroke-width: 2; stroke-linejoin: round;
+        stroke-linecap: round; }
+.dot { stroke: var(--surface); stroke-width: 2; }
+.crosshair { stroke: var(--baseline); stroke-width: 1; visibility: hidden; }
+.hit { fill: transparent; }
+.legend { display: flex; flex-wrap: wrap; gap: 4px 16px;
+          margin: 4px 0 0; padding: 0; list-style: none; font-size: 12px;
+          color: var(--ink-2); }
+.legend .swatch { display: inline-block; width: 12px; height: 3px;
+                  border-radius: 2px; vertical-align: middle;
+                  margin-right: 5px; }
+.tooltip { position: fixed; pointer-events: none; visibility: hidden;
+           background: var(--surface); color: var(--ink);
+           border: 1px solid var(--grid); border-radius: 4px;
+           padding: 6px 9px; font-size: 12px; max-width: 340px;
+           box-shadow: 0 2px 8px rgba(0,0,0,.15); z-index: 10; }
+.tooltip .tl { color: var(--ink-2); margin-bottom: 2px; }
+.tooltip .row { display: flex; gap: 8px; justify-content: space-between; }
+.tooltip .v { font-variant-numeric: tabular-nums; }
+details { margin: 6px 0 0; }
+summary { color: var(--ink-2); cursor: pointer; font-size: 12px; }
+table { border-collapse: collapse; margin: 6px 0; font-size: 12px; }
+th, td { padding: 3px 10px; text-align: left;
+         border-bottom: 1px solid var(--grid); }
+th { color: var(--ink-2); font-weight: 600; }
+td.num { text-align: right; font-variant-numeric: tabular-nums; }
+.delta-good { color: var(--good); }
+.delta-bad { color: var(--bad); }
+""".strip()
+
+JS = """
+(function () {
+  var tip = document.createElement('div');
+  tip.className = 'tooltip';
+  document.body.appendChild(tip);
+  document.querySelectorAll('svg[data-chart]').forEach(function (svg) {
+    var d = JSON.parse(
+      document.getElementById(svg.dataset.chart).textContent);
+    var cross = svg.querySelector('.crosshair');
+    function show(ev) {
+      var box = svg.getBoundingClientRect();
+      var sx = box.width / d.w;
+      var x = (ev.clientX - box.left) / sx;
+      var i = 0, best = Infinity;
+      d.xs.forEach(function (px, j) {
+        var dd = Math.abs(px - x);
+        if (dd < best) { best = dd; i = j; }
+      });
+      cross.setAttribute('x1', d.xs[i]);
+      cross.setAttribute('x2', d.xs[i]);
+      cross.style.visibility = 'visible';
+      while (tip.firstChild) tip.removeChild(tip.firstChild);
+      var tl = document.createElement('div');
+      tl.className = 'tl';
+      tl.textContent = d.labels[i];
+      tip.appendChild(tl);
+      d.series.forEach(function (s) {
+        var v = s.values[i];
+        if (v === null) return;
+        var row = document.createElement('div');
+        row.className = 'row';
+        var name = document.createElement('span');
+        name.textContent = s.name;
+        name.style.color = 'var(--cat' + s.slot + ')';
+        var val = document.createElement('span');
+        val.className = 'v';
+        val.textContent = v;
+        row.appendChild(name);
+        row.appendChild(val);
+        tip.appendChild(row);
+      });
+      tip.style.visibility = 'visible';
+      tip.style.left = Math.min(ev.clientX + 14,
+        window.innerWidth - tip.offsetWidth - 8) + 'px';
+      tip.style.top = Math.min(ev.clientY + 14,
+        window.innerHeight - tip.offsetHeight - 8) + 'px';
+    }
+    function hide() {
+      cross.style.visibility = 'hidden';
+      tip.style.visibility = 'hidden';
+    }
+    svg.addEventListener('mousemove', show);
+    svg.addEventListener('mouseleave', hide);
+  });
+})();
+""".strip()
+
+# geometry (px, viewBox units)
+W, H = 720, 260
+ML, MR, MT, MB = 56, 16, 10, 28
+
+
+def fmt(v: float) -> str:
+    if v == 0:
+        return "0"
+    a = abs(v)
+    if a >= 1e6 or a < 1e-3:
+        return f"{v:.3g}"
+    if a >= 100:
+        return f"{v:,.0f}"
+    if a >= 1:
+        return f"{v:,.3g}"
+    return f"{v:.4g}"
+
+
+def nice_ticks(lo: float, hi: float, n: int = 4) -> list[float]:
+    if hi <= lo:
+        pad = abs(lo) * 0.1 or 1.0
+        lo, hi = lo - pad, hi + pad
+    raw = (hi - lo) / n
+    mag = 10 ** math.floor(math.log10(raw))
+    for m in (1, 2, 2.5, 5, 10):
+        if raw <= m * mag:
+            step = m * mag
+            break
+    t0 = math.floor(lo / step) * step
+    ticks = []
+    t = t0
+    while t <= hi + step * 0.5:
+        if t >= lo - step * 0.5:
+            ticks.append(round(t, 12))
+        t += step
+    return ticks or [lo, hi]
+
+
+def collect_charts(history_dir: str) -> list[dict]:
+    """-> chart dicts: {table, metric, part, labels, series:[{name, slot,
+    values(list[float|None])}]} — one per (table, metric, facet)."""
+    charts = []
+    for path in sorted(glob.glob(os.path.join(history_dir, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                table = json.load(f)["table"]
+        except (OSError, ValueError, KeyError):
+            continue
+        runs = load_history(history_dir, table)
+        if not runs:
+            continue
+        labels = [r.get("label", "?") for r in runs]
+        # union of (rowkey, metric) across the whole series — a row that
+        # appears mid-history still gets a line (leading gaps are nulls)
+        metrics: dict[str, list[str]] = {}
+        for r in runs:
+            for rowkey, vals in r["rows"].items():
+                for col in vals:
+                    keys = metrics.setdefault(col, [])
+                    if rowkey not in keys:
+                        keys.append(rowkey)
+        for col in sorted(metrics):
+            rowkeys = sorted(metrics[col])
+            series = []
+            for key in rowkeys:
+                vals = [
+                    r["rows"].get(key, {}).get(col) for r in runs
+                ]
+                series.append({"name": key or table, "values": vals})
+            # facet: at most MAX_SERIES lines per chart, slots assigned
+            # within the facet in sorted-key order (fixed, never cycled)
+            n_parts = -(-len(series) // MAX_SERIES)
+            for p in range(n_parts):
+                part = series[p * MAX_SERIES:(p + 1) * MAX_SERIES]
+                for slot, s in enumerate(part):
+                    s["slot"] = slot
+                charts.append({
+                    "table": table,
+                    "metric": col,
+                    "part": (p + 1, n_parts),
+                    "labels": labels,
+                    "series": part,
+                })
+    return charts
+
+
+def svg_chart(chart: dict, cid: str) -> str:
+    labels = chart["labels"]
+    n = len(labels)
+    pw, ph = W - ML - MR, H - MT - MB
+    xs = [ML + (pw / 2 if n == 1 else i * pw / (n - 1)) for i in range(n)]
+    allv = [v for s in chart["series"] for v in s["values"] if v is not None]
+    lo, hi = min(allv), max(allv)
+    if lo == hi:
+        pad = abs(lo) * 0.1 or 1.0
+        lo, hi = lo - pad, hi + pad
+    ticks = nice_ticks(lo, hi)
+    lo, hi = min(lo, ticks[0]), max(hi, ticks[-1])
+
+    def y(v: float) -> float:
+        return MT + ph - (v - lo) / (hi - lo) * ph
+
+    g = []
+    # gridlines: hairline, solid, behind the data
+    g.append('<g class="grid">')
+    for t in ticks:
+        g.append(f'<line x1="{ML}" x2="{W - MR}" '
+                 f'y1="{y(t):.1f}" y2="{y(t):.1f}"/>')
+    g.append("</g>")
+    for t in ticks:
+        g.append(f'<text x="{ML - 8}" y="{y(t) + 3.5:.1f}" '
+                 f'text-anchor="end">{html.escape(fmt(t))}</text>')
+    # x labels: first/last always, up to ~5 between
+    step = max(1, -(-n // 6))
+    shown = sorted({0, n - 1, *range(0, n, step)})
+    for i in shown:
+        anchor = "start" if i == 0 else ("end" if i == n - 1 else "middle")
+        g.append(f'<text x="{xs[i]:.1f}" y="{H - 8}" '
+                 f'text-anchor="{anchor}">{html.escape(labels[i])}</text>')
+    g.append(f'<line class="baseline" x1="{ML}" x2="{W - MR}" '
+             f'y1="{MT + ph}" y2="{MT + ph}"/>')
+    # series: 2px line per row key + >=8px end marker ringed in surface
+    for s in chart["series"]:
+        color = f'var(--cat{s["slot"]})'
+        seg: list[str] = []
+        segs = [seg]
+        for i, v in enumerate(s["values"]):
+            if v is None:
+                seg = []
+                segs.append(seg)
+            else:
+                seg.append(f"{xs[i]:.1f},{y(v):.1f}")
+        for seg in segs:
+            if len(seg) >= 2:
+                g.append(f'<polyline class="line" stroke="{color}" '
+                         f'points="{" ".join(seg)}"/>')
+        last = max((i for i, v in enumerate(s["values"]) if v is not None),
+                   default=None)
+        if last is not None:
+            g.append(f'<circle class="dot" fill="{color}" r="4" '
+                     f'cx="{xs[last]:.1f}" cy="{y(s["values"][last]):.1f}"/>')
+    g.append(f'<line class="crosshair" y1="{MT}" y2="{MT + ph}" '
+             f'x1="{ML}" x2="{ML}"/>')
+    g.append(f'<rect class="hit" x="{ML}" y="{MT}" '
+             f'width="{pw}" height="{ph}"/>')
+    data = {
+        "w": W,
+        "xs": [round(x, 1) for x in xs],
+        "labels": labels,
+        "series": [
+            {
+                "name": s["name"],
+                "slot": s["slot"],
+                "values": [None if v is None else fmt(v)
+                           for v in s["values"]],
+            }
+            for s in chart["series"]
+        ],
+    }
+    return (
+        f'<svg viewBox="0 0 {W} {H}" role="img" data-chart="{cid}" '
+        f'aria-label="{html.escape(chart["table"])} '
+        f'{html.escape(chart["metric"])} trend">'
+        + "".join(g)
+        + "</svg>\n"
+        + f'<script type="application/json" id="{cid}">'
+        + json.dumps(data)
+        + "</script>"
+    )
+
+
+def delta_cell(first: float | None, last: float | None, metric: str) -> str:
+    if first is None or last is None or first == 0:
+        return '<td class="num muted">–</td>'
+    rel = (last - first) / abs(first)
+    if abs(rel) < 1e-9:
+        return '<td class="num muted">flat</td>'
+    up_good = any(frag in metric for frag in _UP_GOOD)
+    good = (rel > 0) == up_good
+    cls = "delta-good" if good else "delta-bad"
+    arrow = "▲" if rel > 0 else "▼"
+    word = "better" if good else "worse"
+    return (f'<td class="num {cls}">{arrow} {rel:+.1%} ({word})</td>')
+
+
+def table_twin(chart: dict) -> str:
+    labels = chart["labels"]
+    rows = ['<details><summary>Table view</summary><table>',
+            f"<tr><th>series</th><th>oldest ({html.escape(labels[0])})</th>"
+            f"<th>latest ({html.escape(labels[-1])})</th>"
+            "<th>change</th></tr>"]
+    for s in chart["series"]:
+        present = [v for v in s["values"] if v is not None]
+        first = present[0] if present else None
+        last = present[-1] if present else None
+        rows.append(
+            "<tr>"
+            f"<td>{html.escape(s['name'])}</td>"
+            f'<td class="num">{fmt(first) if first is not None else "–"}</td>'
+            f'<td class="num">{fmt(last) if last is not None else "–"}</td>'
+            + delta_cell(first, last, chart["metric"])
+            + "</tr>"
+        )
+    rows.append("</table></details>")
+    return "\n".join(rows)
+
+
+def legend(chart: dict) -> str:
+    if len(chart["series"]) < 2:
+        # a single series needs no legend box — name it in the subtitle
+        return (f'<p class="series-note">series: '
+                f'{html.escape(chart["series"][0]["name"])}</p>')
+    items = "".join(
+        f'<li><span class="swatch" '
+        f'style="background: var(--cat{s["slot"]})"></span>'
+        f"{html.escape(s['name'])}</li>"
+        for s in chart["series"]
+    )
+    return f'<ul class="legend">{items}</ul>'
+
+
+def render(charts: list[dict], title: str) -> str:
+    light_vars = "\n  ".join(
+        f"--cat{i}: {c};" for i, c in enumerate(CAT_LIGHT))
+    dark_vars = "\n  ".join(
+        f"--cat{i}: {c};" for i, c in enumerate(CAT_DARK))
+    body = [f"<h1>{html.escape(title)}</h1>"]
+    if not charts:
+        body.append(
+            '<p class="sub">No benchmark history yet — the committed '
+            "series (<code>benchmarks/history/BENCH_*.json</code>) is "
+            "written by the nightly job's <code>diff_tables.py "
+            "--update-history</code> run; this page fills in after the "
+            "first one lands.</p>"
+        )
+    else:
+        n_runs = max(len(c["labels"]) for c in charts)
+        body.append(
+            f'<p class="sub">{len(charts)} charts over {n_runs} retained '
+            "nightly runs. Hover for values; each chart has a table view "
+            "with the oldest→latest change (direction judged per metric: "
+            "throughput-like up is better, time-like down is better)."
+            "</p>"
+        )
+        cur_table = None
+        for i, c in enumerate(charts):
+            if c["table"] != cur_table:
+                cur_table = c["table"]
+                body.append(f"<h2>{html.escape(cur_table)}</h2>")
+            part = (f" ({c['part'][0]}/{c['part'][1]})"
+                    if c["part"][1] > 1 else "")
+            cid = f"d{i}"
+            body.append('<div class="chart">')
+            body.append(
+                f"<h3>{html.escape(c['metric'])}{html.escape(part)}</h3>")
+            body.append(svg_chart(c, cid))
+            body.append(legend(c))
+            body.append(table_twin(c))
+            body.append("</div>")
+    css = CSS % {"light_vars": light_vars, "dark_vars": dark_vars}
+    return (
+        "<!doctype html>\n"
+        '<html lang="en"><head><meta charset="utf-8">\n'
+        '<meta name="viewport" content="width=device-width, '
+        'initial-scale=1">\n'
+        f"<title>{html.escape(title)}</title>\n"
+        f"<style>\n{css}\n</style>\n"
+        "</head><body>\n" + "\n".join(body) +
+        f"\n<script>\n{JS}\n</script>\n</body></html>\n"
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--history-dir", default="benchmarks/history",
+                    help="directory of committed BENCH_<table>.json series")
+    ap.add_argument("--out", default="trend/index.html",
+                    help="output HTML path (parent dirs created)")
+    ap.add_argument("--title", default="Nightly benchmark trends")
+    args = ap.parse_args(argv)
+    charts = collect_charts(args.history_dir)
+    page = render(charts, args.title)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w", encoding="utf-8") as f:
+        f.write(page)
+    print(f"trend page: {args.out} ({len(charts)} charts, "
+          f"{len(page)} bytes)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

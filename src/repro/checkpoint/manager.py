@@ -31,6 +31,8 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro import obs
+
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
     flat = {}
@@ -60,6 +62,11 @@ def save_checkpoint(
     ``--resume`` restores the recycle signal along with the params.
     """
     os.makedirs(directory, exist_ok=True)
+    with obs.span("checkpoint.save", cat="checkpoint", step=step):
+        return _save_checkpoint(directory, step, state, ledger)
+
+
+def _save_checkpoint(directory, step, state, ledger):
     final = os.path.join(directory, f"step_{step:010d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -124,21 +131,26 @@ def load_checkpoint(
     """Restore into `target`'s structure. `put(np_array, target_leaf)` lets
     the caller device_put with the target's sharding (multi-pod restore)."""
     path = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    with obs.span("checkpoint.restore", cat="checkpoint", step=step):
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
 
-    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(target)
-    out = []
-    for pth, leaf in leaves_with_path:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
-        meta = manifest["leaves"][key]
-        arr = np.load(os.path.join(path, meta["file"]))
-        if arr.dtype.kind == "V":  # ml_dtypes (bf16, fp8) round-trip as void
-            import ml_dtypes
+        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(
+            target
+        )
+        out = []
+        for pth, leaf in leaves_with_path:
+            key = "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in pth
+            )
+            meta = manifest["leaves"][key]
+            arr = np.load(os.path.join(path, meta["file"]))
+            if arr.dtype.kind == "V":  # ml_dtypes round-trip as void
+                import ml_dtypes
 
-            arr = arr.view(np.dtype(getattr(ml_dtypes, meta["dtype"])))
-        out.append(put(arr, leaf) if put is not None else arr)
-    return jax.tree_util.tree_unflatten(treedef, out)
+                arr = arr.view(np.dtype(getattr(ml_dtypes, meta["dtype"])))
+            out.append(put(arr, leaf) if put is not None else arr)
+        return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def load_ledger(directory: str, step: int) -> Optional[dict[str, np.ndarray]]:
@@ -174,7 +186,8 @@ class CheckpointManager:
         ledger: Optional[dict[str, np.ndarray]] = None,
     ) -> None:
         self.wait()  # one in-flight save; join the previous
-        host_state = jax.tree.map(np.asarray, state)  # fetch before async
+        with obs.span("checkpoint.fetch", cat="checkpoint", step=step):
+            host_state = jax.tree.map(np.asarray, state)  # fetch before async
         if ledger is not None:
             # snapshot NOW: a host-side ledger keeps mutating these arrays
             # in place while the save thread runs (np.asarray would alias)

@@ -241,6 +241,17 @@ def make_train_step(
     return train_step
 
 
+def step_cost_savings(step_cost) -> float:
+    """Fraction of the dense step's compute a step saved, from the
+    ``step_cost`` metric (units of one full-batch forward C; the dense
+    baseline is 3C = fwd + bwd on all n). The loop-health gauge the
+    trainer snapshots: 0.0 for mode="full", up to ``1 - r`` for a fully
+    recycled step keeping ratio ``r``. Negative would mean selection cost
+    exceeded the subset saving — worth alerting on, so it is NOT clamped.
+    """
+    return 1.0 - float(step_cost) / 3.0
+
+
 def make_eval_step(per_example_loss_fn: Callable[[Any, Batch, Array], Array]):
     def eval_step(params: Any, batch: Batch, rng: Array) -> Array:
         return jax.lax.stop_gradient(

@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.device_ledger import (
     LedgerState,
     init_state,
@@ -165,6 +166,18 @@ def exchange_bytes_per_op(
     cap = a2a_capacity(batch, shards, capacity_factor)
     n = 2 * shards * cap * item_bytes
     return n + (gather_round if overflow else 0)
+
+
+def _host_span(name: str, **args):
+    """A telemetry span only when dispatching from host Python. These ops
+    also trace INSIDE fused jits (the engine step / train step call
+    ``record`` through ``recorder.score_one``), where opening a span would
+    time the trace once and record nothing at run time — a traced call
+    gets the shared null span instead."""
+    clean = getattr(jax.core, "trace_state_clean", None)
+    if clean is None or clean():
+        return obs.span(name, cat="ledger", **args)
+    return obs.NULL_SPAN
 
 
 @dataclasses.dataclass(frozen=True)
@@ -476,7 +489,12 @@ class ShardedLedgerOps:
 
         fn = self._wrap(local, 4 if has_sig else 3, (state_spec, P()))
         args = (state, ids, losses, valid) + ((signals,) if has_sig else ())
-        st, ovf = fn(*args, jnp.asarray(step, I32))
+        with _host_span(
+            "ledger.record",
+            exchange=self.exchange if self.route else "pinned",
+            shards=self.shards,
+        ):
+            st, ovf = fn(*args, jnp.asarray(step, I32))
         if return_stats:
             return st, {"a2a_overflow": ovf}
         return st
@@ -503,7 +521,8 @@ class ShardedLedgerOps:
             )
 
         fn = self._wrap(local, 1, (dp, dp))
-        return fn(state, ids, jnp.zeros((), I32))
+        with _host_span("ledger.lookup", shards=self.shards):
+            return fn(state, ids, jnp.zeros((), I32))
 
     def lookup_signals(self, state: LedgerState, ids):
         """Multi-channel probe -> (ema [B], sig [B, N_AUX], seen [B]);
@@ -530,7 +549,8 @@ class ShardedLedgerOps:
             )
 
         fn = self._wrap(local, 1, (dp, dp, dp))
-        return fn(state, ids, jnp.zeros((), I32))
+        with _host_span("ledger.lookup_signals", shards=self.shards):
+            return fn(state, ids, jnp.zeros((), I32))
 
     def priority(self, state: LedgerState, ids, step):
         dp = P(tuple(self.dp_axes))
@@ -550,7 +570,8 @@ class ShardedLedgerOps:
             return self._return_route(pri, mine, b)
 
         fn = self._wrap(local, 1, dp)
-        return fn(state, ids, jnp.asarray(step, I32))
+        with _host_span("ledger.priority", shards=self.shards):
+            return fn(state, ids, jnp.asarray(step, I32))
 
     def record_priority(
         self,
@@ -596,7 +617,12 @@ class ShardedLedgerOps:
 
         fn = self._wrap(local, 4 if has_sig else 3, (state_spec, dp, P()))
         args = (state, ids, losses, valid) + ((signals,) if has_sig else ())
-        st, pri, ovf = fn(*args, jnp.asarray(step, I32))
+        with _host_span(
+            "ledger.record_priority",
+            exchange=self.exchange if self.route else "pinned",
+            shards=self.shards,
+        ):
+            st, pri, ovf = fn(*args, jnp.asarray(step, I32))
         if return_stats:
             return st, pri, {"a2a_overflow": ovf}
         return st, pri

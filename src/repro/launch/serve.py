@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.core.history import HistoryConfig
 from repro.data import DataConfig, SyntheticLMStream
 from repro.launch.mesh import make_elastic_mesh
@@ -42,7 +42,7 @@ from repro.models.params import materialize
 from repro.serving import Engine, OutcomeRecorder, delayed_outcomes, pad_safe
 
 
-def build_engine(args, cfg, params):
+def build_engine(args, cfg, params, telemetry=None):
     mesh = make_elastic_mesh() if args.ledger_route else None
     if args.ledger_route and args.ledger != "device":
         raise SystemExit("--ledger-route requires --ledger device")
@@ -71,6 +71,7 @@ def build_engine(args, cfg, params):
         temperature=args.temperature,
         top_p=args.top_p,
         sample_seed=args.seed,
+        telemetry=telemetry,
     )
 
 
@@ -185,14 +186,16 @@ def main(argv=None) -> int:
     ap.add_argument("--json-out", default="",
                     help="write a run summary (throughput, records, ledger "
                          "stats) as JSON")
+    obs.add_cli_args(ap)
     args = ap.parse_args(argv)
     if args.requests <= 0:
         args.requests = 3 * args.batch
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    telem = obs.from_args(args)
     rng = jax.random.key(args.seed)
     params = materialize(Mdl.param_specs(cfg), rng, jnp.dtype(cfg.param_dtype))
-    engine = build_engine(args, cfg, params)
+    engine = build_engine(args, cfg, params, telemetry=telem)
 
     if args.ledger_in:
         engine.load_ledger_state_dict(dict(np.load(args.ledger_in)))
@@ -211,10 +214,19 @@ def main(argv=None) -> int:
         + f" ({bps / 1e6:.3f} MB retained/slot)"
     )
 
-    on_step = (
+    deliver = (
         delayed_outcomes(submitted, args.outcome_delay)  # pairs: dup ids ok
         if args.outcome_delay else None
     )
+
+    def on_step(eng, metrics):
+        if deliver is not None:
+            deliver(eng, metrics)
+        if telem.events is not None and eng.steps_run % args.metrics_every == 0:
+            # drift=True fetches the device ledger's state_dict — a device
+            # round-trip, which is why it rides the snapshot cadence and
+            # never the per-step path
+            telem.event("loop_health", **eng.loop_health(drift=True))
 
     t0 = time.time()
     stats = engine.run(max_steps=100_000, on_step=on_step)
@@ -245,24 +257,31 @@ def main(argv=None) -> int:
     print("sample generations (token ids):")
     for iid in list(engine.finished)[:2]:
         print("  ", engine.finished[iid][:12].tolist())
+    # ONE summary dict serves every consumer: --json-out, the final
+    # "summary" event of --metrics-out, and the stdout epilogue above all
+    # read the same engine.stats() snapshot (one batched device fetch)
+    summary = dict(
+        stats,
+        tok_per_s=tok_s,
+        waves=waves,
+        ledger=args.ledger,
+        routed=bool(args.ledger_route),
+        exchange=args.ledger_exchange if args.ledger_route else "none",
+        capacity_factor=args.capacity_factor,
+        shards=shards,
+        hit_rate=float(np.asarray(seen).mean()),
+        outcome_delay=args.outcome_delay,
+        retention=args.retain,
+        topk=args.topk,
+        retained_bytes_per_slot=bps,
+        health=engine.loop_health(drift=True),
+    )
+    if telem.registry is not None:
+        summary["metrics"] = telem.snapshot()
     if args.json_out:
-        summary = dict(
-            stats,
-            tok_per_s=tok_s,
-            waves=waves,
-            ledger=args.ledger,
-            routed=bool(args.ledger_route),
-            exchange=args.ledger_exchange if args.ledger_route else "none",
-            capacity_factor=args.capacity_factor,
-            shards=shards,
-            hit_rate=float(np.asarray(seen).mean()),
-            outcome_delay=args.outcome_delay,
-            retention=args.retain,
-            topk=args.topk,
-            retained_bytes_per_slot=bps,
-        )
         with open(args.json_out, "w") as f:
             json.dump(summary, f)
+    telem.close(summary=summary)
     return 0
 
 

@@ -35,11 +35,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.checkpoint import CheckpointManager
 from repro.core import device_ledger as dledger
 from repro.core.history import HistoryConfig, LossHistory
-from repro.core.obftf import OBFTFConfig, make_train_step
+from repro.core.obftf import OBFTFConfig, make_train_step, step_cost_savings
 from repro.core.selection import (
     POLICIES,
     SelectionConfig,
@@ -137,9 +137,11 @@ def main(argv=None) -> int:
     ap.add_argument("--model-parallel", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    obs.add_cli_args(ap)
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    telem = obs.from_args(args)
     mesh = make_elastic_mesh(model_parallel=args.model_parallel)
     rules = DEFAULT_RULES
     single_device = mesh.devices.size == 1
@@ -336,6 +338,39 @@ def main(argv=None) -> int:
     cost_log = []
     hits_log = []
     a2a_overflow = 0  # items that took the a2a exact fallback round
+
+    # telemetry: bound once; per-step updates are host arithmetic on the
+    # step's already-fetched metrics (same contract as the engine — the
+    # instrumented jitted step stays transfer_guard("disallow")-clean).
+    # NOTE: no EMA-drift oracle on the device-ledger train path — that
+    # path deliberately deletes the per-example arrays from the shipped
+    # metrics (docs/observability.md), so the loop-health gauges here are
+    # rates only.
+    c_steps = telem.counter("trainer.steps")
+    c_straggler = telem.counter("trainer.stragglers")
+    c_overflow = telem.counter("trainer.a2a_overflow")
+    g_loss = telem.gauge("trainer.loss")
+    g_cost = telem.gauge("trainer.step_cost")
+    g_savings = telem.gauge("trainer.step_cost_savings")
+    g_hits = telem.gauge("trainer.ledger_hit_rate")
+    h_step = telem.histogram("trainer.step_ms")
+
+    def train_health() -> dict:
+        steps_done = len(losses_log)
+        return {
+            "steps": steps_done,
+            "loss": losses_log[-1] if losses_log else None,
+            "step_cost": cost_log[-1] if cost_log else None,
+            "step_cost_savings": (
+                step_cost_savings(cost_log[-1]) if cost_log else None
+            ),
+            "mean_step_cost": float(np.mean(cost_log)) if cost_log else None,
+            "ledger_hit_rate": hits_log[-1] if hits_log else None,
+            "a2a_overflow_rate": obs.rate_of(a2a_overflow, steps_done),
+            "straggler_rate": obs.rate_of(watchdog.flagged, steps_done),
+            "step_ms_ema": (watchdog.ema or 0.0) * 1e3,
+        }
+
     with use_rules(mesh, rules):
         for step in range(start_step, args.steps):
             t0 = time.time()
@@ -345,17 +380,21 @@ def main(argv=None) -> int:
                 "labels": jnp.asarray(raw["labels"]),
             }
             rng, sub = jax.random.split(rng)
-            if use_device_ledger:
-                batch["instance_id"] = jnp.asarray(
-                    raw["instance_id"].astype(np.int32)
-                )
-                state, led_state, metrics = jit_step(state, led_state,
-                                                     batch, sub)
-            else:
-                if args.recycle:
-                    batch["recorded_loss"] = jnp.asarray(raw["recorded_loss"])
-                state, metrics = jit_step(state, batch, sub)
-            metrics = jax.device_get(metrics)
+            with telem.span("train.step", step=step):
+                if use_device_ledger:
+                    batch["instance_id"] = jnp.asarray(
+                        raw["instance_id"].astype(np.int32)
+                    )
+                    state, led_state, metrics = jit_step(state, led_state,
+                                                         batch, sub)
+                else:
+                    if args.recycle:
+                        batch["recorded_loss"] = jnp.asarray(
+                            raw["recorded_loss"]
+                        )
+                    state, metrics = jit_step(state, batch, sub)
+            with telem.span("train.fetch_metrics"):
+                metrics = jax.device_get(metrics)
             dt = time.time() - t0
             slow = watchdog.observe(dt)
             if history is not None:
@@ -376,6 +415,20 @@ def main(argv=None) -> int:
                 hits_log.append(float(raw.get("ledger_hit_rate", 0.0)))
             losses_log.append(float(metrics["loss"]))
             cost_log.append(float(metrics["step_cost"]))
+            c_steps.inc()
+            if slow:
+                c_straggler.inc()
+            g_loss.set(losses_log[-1])
+            g_cost.set(cost_log[-1])
+            g_savings.set(step_cost_savings(cost_log[-1]))
+            h_step.observe(dt * 1e3)
+            if use_device_ledger:
+                c_overflow.inc(int(metrics["a2a_overflow"]))
+            if hits_log:
+                g_hits.set(hits_log[-1])
+            if telem.events is not None and \
+                    (step + 1) % args.metrics_every == 0:
+                telem.event("loop_health", **train_health())
             if step % args.log_every == 0 or slow:
                 print(
                     f"step {step:5d} loss={metrics['loss']:.4f} "
@@ -405,27 +458,34 @@ def main(argv=None) -> int:
           f"loss {losses_log[0]:.4f} -> {losses_log[-1]:.4f}, "
           f"step_cost {mean_cost:.3f}C, "
           f"stragglers flagged: {watchdog.flagged}")
+    # one summary for every consumer: --json-out and the final "summary"
+    # event of --metrics-out carry the identical payload
+    summary = {
+        "steps": len(losses_log),
+        "loss_first": losses_log[0],
+        "loss_last": losses_log[-1],
+        "mean_step_cost": mean_cost,
+        "step_cost_savings": step_cost_savings(mean_cost),
+        "method": args.method,
+        "ratio": args.ratio,
+        "recycle": bool(args.recycle),
+        "policy": args.policy,
+        "ledger": args.ledger,
+        "exchange": (args.ledger_exchange if args.ledger_route
+                     else "none"),
+        "capacity_factor": args.capacity_factor,
+        "a2a_overflow": a2a_overflow,
+        "stragglers": watchdog.flagged,
+        "ledger_hits_first": hits_log[0] if hits_log else None,
+        "ledger_hits_mean": float(np.mean(hits_log)) if hits_log else None,
+        "health": train_health(),
+    }
+    if telem.registry is not None:
+        summary["metrics"] = telem.snapshot()
     if args.json_out:
-        summary = {
-            "steps": len(losses_log),
-            "loss_first": losses_log[0],
-            "loss_last": losses_log[-1],
-            "mean_step_cost": mean_cost,
-            "method": args.method,
-            "ratio": args.ratio,
-            "recycle": bool(args.recycle),
-            "policy": args.policy,
-            "ledger": args.ledger,
-            "exchange": (args.ledger_exchange if args.ledger_route
-                         else "none"),
-            "capacity_factor": args.capacity_factor,
-            "a2a_overflow": a2a_overflow,
-            "stragglers": watchdog.flagged,
-            "ledger_hits_first": hits_log[0] if hits_log else None,
-            "ledger_hits_mean": float(np.mean(hits_log)) if hits_log else None,
-        }
         with open(args.json_out, "w") as f:
             json.dump(summary, f)
+    telem.close(summary=summary)
     return 0
 
 

@@ -31,13 +31,15 @@ Python between steps, like any serving scheduler; the data plane
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.history import LossHistory
+from repro import obs
+from repro.core.history import AUX_CHANNELS, LossHistory
 from repro.models import model as Mdl
 from repro.models.config import ModelConfig
 from repro.serving.pages import PagePool, pages_for
@@ -219,6 +221,8 @@ class Engine:
         temperature: float = 0.0,
         top_p: float = 1.0,
         sample_seed: int = 0,
+        telemetry: Optional[obs.Telemetry] = None,
+        track_drift: Optional[bool] = None,
     ):
         self.cfg = cfg
         self.recorder = recorder  # self.params set below (mesh-replicated)
@@ -327,6 +331,39 @@ class Engine:
         # dropped so one compile serves any count
         self._grow_jit = jax.jit(self._grow_fn, donate_argnums=(0,))
         self._clear_jit = jax.jit(self._clear_fn, donate_argnums=(0,))
+
+        # -- telemetry: instruments bound ONCE here; per-step updates are
+        # host arithmetic on the step's already-fetched numpy metrics
+        # (obs module doc / tests/test_obs.py transfer-guard regression)
+        t = telemetry if telemetry is not None else obs.current()
+        self.telemetry = t
+        self._c_steps = t.counter("engine.steps")
+        self._c_tokens = t.counter("engine.generated_tokens")
+        self._c_records = t.counter("engine.ledger_records")
+        self._c_miss = t.counter("engine.topk_miss")
+        self._c_overflow = t.counter("engine.a2a_overflow")
+        self._c_admitted = t.counter("engine.admitted")
+        self._c_evicted = t.counter("engine.evicted")
+        self._c_deferred = t.counter("engine.deferred_admissions")
+        self._c_missed = t.counter("engine.missed_outcomes")
+        self._g_occupancy = t.gauge("engine.occupancy")
+        self._g_queue = t.gauge("engine.queue_depth")
+        self._h_step_ms = t.histogram("engine.step_ms")
+        # host-side mirrors of the device record/miss counters so
+        # loop_health() derives rates without a device fetch
+        self._records_host = 0
+        self._miss_host = 0
+        # EMA-drift oracle: a host LossHistory fed the exact rows the
+        # fused step records on device; compared channel-by-channel in
+        # loop_health(drift=True). Device-ledger runs only (the host
+        # ledger IS the oracle) and only when telemetry is live.
+        if track_drift is None:
+            track_drift = t.enabled and recorder.ledger == "device"
+        self._shadow: Optional[LossHistory] = (
+            LossHistory(recorder.cfg)
+            if track_drift and recorder.ledger == "device"
+            else None
+        )
 
     # -- device state --------------------------------------------------------
 
@@ -555,22 +592,28 @@ class Engine:
                     req.expect_labels = False
                     return True
             self.missed_outcomes += 1
+            self._c_missed.inc()
             return False
         limit = self._max_new_of.get(int(instance_id), self.max_gen)
         row = np.full((self.recorder.max_gen,), -1, np.int64)
         labels = np.asarray(labels, np.int64).reshape(-1)
         use = min(labels.size, limit)
         row[:use] = labels[:use]
-        self.missed_outcomes += int((labels[limit:] >= 0).sum())
+        cut = int((labels[limit:] >= 0).sum())
+        self.missed_outcomes += cut
+        self._c_missed.inc(cut)
         # route the row onto the recorder's placement (mesh-replicated on
         # sharded recorders) BEFORE the jit: a default-device array would
         # need an implicit transfer at the _deliver boundary, and the
         # updated labels could come back off-mesh and trip the next
         # guarded fused step
-        self._rstate = self._deliver(
-            self._rstate, slot,
-            self.recorder.replicate(jnp.asarray(row.astype(np.int32))),
-        )
+        with self.telemetry.span(
+            "engine.deliver", inst=int(instance_id), slot=slot
+        ):
+            self._rstate = self._deliver(
+                self._rstate, slot,
+                self.recorder.replicate(jnp.asarray(row.astype(np.int32))),
+            )
         self._await_labels[int(instance_id)] = False
         self._fresh_labels.add(slot)
         return True
@@ -584,6 +627,13 @@ class Engine:
         return self.max_prompt
 
     def _admit(self, req: Request) -> None:
+        with self.telemetry.span(
+            "engine.admit", inst=req.instance_id, prompt=int(req.prompt.size)
+        ):
+            self._admit_inner(req)
+        self._c_admitted.inc()
+
+    def _admit_inner(self, req: Request) -> None:
         slot = self._free.pop()
         pt_row = None
         if self.pool is not None:
@@ -600,9 +650,10 @@ class Engine:
         toks = np.full((1, p), self.pad_token, np.int32)
         toks[0, : req.prompt.size] = req.prompt
         lp = np.asarray([req.prompt.size - 1], np.int32)
-        logits0, new_cache = self._prefill(p)(
-            self.params, jnp.asarray(toks), jnp.asarray(lp)
-        )
+        with self.telemetry.span("engine.prefill", padded_len=p):
+            logits0, new_cache = self._prefill(p)(
+                self.params, jnp.asarray(toks), jnp.asarray(lp)
+            )
         row = np.full((self.recorder.max_gen,), -1, np.int64)
         if req.labels is not None:
             row[: min(req.labels.size, req.max_new)] = req.labels[
@@ -611,9 +662,9 @@ class Engine:
             # labels past max_new have no decoded position to score
             # against — drop and count them (deliver_outcome applies the
             # same max_new cut to labels arriving mid-residency)
-            self.missed_outcomes += int(
-                (req.labels[req.max_new:] >= 0).sum()
-            )
+            cut = int((req.labels[req.max_new:] >= 0).sum())
+            self.missed_outcomes += cut
+            self._c_missed.inc(cut)
         self._estate, self._rstate = self._insert(
             self._estate, self._rstate, new_cache, logits0,
             slot, req.instance_id, req.prompt.size, req.max_new,
@@ -629,7 +680,7 @@ class Engine:
         m = self._last_metrics
         if m is None:
             return
-        cleared: list[int] = []
+        done: list[tuple[int, int, int]] = []  # (inst, slot, gen)
         for inst, slot in list(self._slot_of.items()):
             if (
                 m["finished"][slot]
@@ -637,22 +688,34 @@ class Engine:
                 and slot not in self._fresh_labels
                 and not self._await_labels.get(inst, False)
             ):
-                gen = int(m["gen_idx"][slot])
-                toks = jax.device_get(self._estate.out_toks[slot, :gen])
-                self.finished[inst] = np.asarray(toks)
-                del self._slot_of[inst]
-                self._max_new_of.pop(inst, None)
-                self._await_labels.pop(inst, None)
-                self._admission_seq.pop(inst, None)
-                self._free.append(slot)
-                self.evicted += 1
-                if self.pool is not None:
-                    self.pool.release(
-                        self._slot_pages.pop(slot),
-                        self._slot_reserve.pop(slot),
-                    )
-                    self._pos_host[slot] = 0
-                    cleared.append(slot)
+                done.append((inst, slot, int(m["gen_idx"][slot])))
+        if not done:
+            return
+        # ONE batched fetch of every evicting slot's token rows (was one
+        # device_get per slot); the per-slot :gen cut happens on host
+        with self.telemetry.span("engine.evict_fetch", n=len(done)):
+            rows = jax.device_get(
+                self._estate.out_toks[
+                    np.asarray([s for _, s, _ in done], np.int32)
+                ]
+            )
+        cleared: list[int] = []
+        for (inst, slot, gen), row in zip(done, np.asarray(rows)):
+            self.finished[inst] = np.asarray(row[:gen])
+            del self._slot_of[inst]
+            self._max_new_of.pop(inst, None)
+            self._await_labels.pop(inst, None)
+            self._admission_seq.pop(inst, None)
+            self._free.append(slot)
+            self.evicted += 1
+            self._c_evicted.inc()
+            if self.pool is not None:
+                self.pool.release(
+                    self._slot_pages.pop(slot),
+                    self._slot_reserve.pop(slot),
+                )
+                self._pos_host[slot] = 0
+                cleared.append(slot)
         if cleared:
             # clear the freed rows to -1 so the (still-resident-shaped)
             # frozen K/V writes of a reused slot can never land in pages
@@ -697,6 +760,7 @@ class Engine:
                     and not self.pool.fits(self._pages_needed(r)[2])
                 ):
                     self.deferred_admissions += 1
+                    self._c_deferred.inc()
                     continue
                 idx = i
                 break
@@ -707,14 +771,21 @@ class Engine:
             return None
         if self.pool is not None:
             self._grow_pages()
-        if self.guard_transfers and self._warm:
-            with jax.transfer_guard("disallow"):
+        t0 = time.perf_counter()
+        with self.telemetry.span(
+            "engine.decode_step", occupied=len(self._slot_of)
+        ):
+            if self.guard_transfers and self._warm:
+                with jax.transfer_guard("disallow"):
+                    out = self._decode(
+                        self.params, self._estate, self._rstate
+                    )
+            else:
                 out = self._decode(self.params, self._estate, self._rstate)
-        else:
-            out = self._decode(self.params, self._estate, self._rstate)
-            self._warm = True
+                self._warm = True
         self._estate, self._rstate, metrics = out
-        metrics = jax.device_get(metrics)
+        with self.telemetry.span("engine.fetch_metrics"):
+            metrics = jax.device_get(metrics)
         self._fresh_labels.clear()  # this step's `pending` saw every label
         if self.recorder.host_history is not None:
             self.recorder.record_host(
@@ -724,6 +795,19 @@ class Engine:
                     [metrics["entropy"], metrics["margin"]], axis=-1
                 ),
             )
+        if self._shadow is not None:
+            # the drift oracle: same rows, same step number the fused step
+            # recorded on device — all from the metrics already fetched
+            v = np.asarray(metrics["loss_valid"], bool)
+            if v.any():
+                self._shadow.record(
+                    np.asarray(metrics["inst"], np.int64)[v],
+                    np.asarray(metrics["loss"])[v],
+                    self.steps_run + 1,
+                    signals=np.stack(
+                        [metrics["entropy"], metrics["margin"]], axis=-1
+                    )[v],
+                )
         self._last_metrics = metrics
         self.steps_run += 1
         self.generated_tokens += int(metrics["decoding"].sum())
@@ -732,7 +816,70 @@ class Engine:
             # host mirror of the device pos vector (what _grow_pages keys
             # on): advances exactly where the step decoded
             self._pos_host += np.asarray(metrics["decoding"], bool)
+        self._obs_on_step(metrics, (time.perf_counter() - t0) * 1e3)
         return metrics
+
+    def _obs_on_step(
+        self, metrics: dict, dt_ms: Optional[float] = None
+    ) -> None:
+        """Update instruments from one step's ALREADY-FETCHED numpy
+        metrics — plain host arithmetic, no jax.Array anywhere (the
+        telemetry transfer-freedom contract; priced by the ``obs`` row in
+        ``benchmarks/selection_bench``)."""
+        n_rec = int(np.sum(metrics["loss_valid"]))
+        n_miss = int(np.sum(metrics["topk_miss"]))
+        self._records_host += n_rec
+        self._miss_host += n_miss
+        self._c_steps.inc()
+        self._c_tokens.inc(int(np.sum(metrics["decoding"])))
+        self._c_records.inc(n_rec)
+        self._c_miss.inc(n_miss)
+        self._c_overflow.inc(int(metrics["a2a_overflow"]))
+        self._g_occupancy.set(len(self._slot_of) / self.slots)
+        self._g_queue.set(len(self._queue))
+        if dt_ms is not None:
+            self._h_step_ms.observe(dt_ms)
+
+    def loop_health(self, drift: bool = False) -> dict:
+        """Loop-health gauges as RATES (not totals): the body of the
+        periodic ``--metrics-out`` snapshot and the final summary's
+        ``health`` block. The default is host-only arithmetic on counters
+        the engine already keeps; ``drift=True`` additionally fetches the
+        device ledger's state_dict and compares it per EMA channel against
+        the host shadow oracle — that IS a device round-trip, so snapshot
+        cadence only, never per step (and never inside the transfer
+        guard, which only wraps the fused decode call)."""
+        steps = self.steps_run
+        attempts = self.admitted + self.deferred_admissions
+        h = {
+            "steps": steps,
+            "occupancy": obs.rate_of(len(self._slot_of), self.slots),
+            "queue_depth": len(self._queue),
+            "admission_rate": obs.rate_of(self.admitted, steps),
+            "eviction_rate": obs.rate_of(self.evicted, steps),
+            "deferral_rate": obs.rate_of(self.deferred_admissions, attempts),
+            "tokens_per_step": obs.rate_of(self.generated_tokens, steps),
+            "records_per_step": obs.rate_of(self._records_host, steps),
+            "topk_miss_frac": obs.rate_of(self._miss_host, self._records_host),
+            "a2a_overflow_rate": obs.rate_of(
+                self.a2a_overflow, self._records_host
+            ),
+            "missed_outcome_rate": obs.rate_of(
+                self.missed_outcomes,
+                self._records_host + self.missed_outcomes,
+            ),
+        }
+        if self.pool is not None:
+            h.update(
+                {f"pool_{k}": v for k, v in self.pool.stats().items()}
+            )
+        if drift and self._shadow is not None:
+            h["ledger_drift"] = obs.ledger_drift(
+                self._shadow.state_dict(),
+                self.ledger_state_dict(),
+                AUX_CHANNELS,
+            )
+        return h
 
     def run(self, max_steps: int = 1_000_000, on_step=None) -> dict:
         """Drive until the queue is empty and every slot drained + evicted.
@@ -750,13 +897,15 @@ class Engine:
         return self.stats()
 
     def stats(self) -> dict:
+        # one batched fetch of both device counters (recorder.counters)
+        n_rec, n_miss = self.recorder.counters(self._rstate)
         return {
             "admitted": self.admitted,
             "evicted": self.evicted,
             "steps": self.steps_run,
             "generated_tokens": self.generated_tokens,
-            "recorded": int(jax.device_get(self._rstate.n_recorded)),
-            "topk_misses": int(jax.device_get(self._rstate.n_miss)),
+            "recorded": n_rec,
+            "topk_misses": n_miss,
             "a2a_overflow": self.a2a_overflow,
             "missed_outcomes": self.missed_outcomes,
             "queued": len(self._queue),

@@ -69,6 +69,20 @@ class PagePool:
     def fits(self, n_pages: int) -> bool:
         return n_pages <= self.headroom
 
+    def stats(self) -> dict:
+        """Loop-health view: physical utilization plus the commitment
+        fraction (allocated + reserved) the admission gate actually sees —
+        a pool can look half-empty yet defer everything because resident
+        slots hold the headroom as reservations."""
+        alloc = self.num_pages - len(self._free)
+        return {
+            "pages_total": self.num_pages,
+            "pages_free": len(self._free),
+            "pages_reserved": self._reserved,
+            "utilization": alloc / self.num_pages,
+            "commitment": (alloc + self._reserved) / self.num_pages,
+        }
+
     # -- lifecycle -----------------------------------------------------------
 
     def admit(

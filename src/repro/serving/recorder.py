@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import obs
 from repro.core import device_ledger as dledger
 from repro.core.history import HistoryConfig, LossHistory
 from repro.distributed.ledger import ShardedLedgerOps, sharded_ledger_ops
@@ -470,11 +471,19 @@ class OutcomeRecorder:
         assert self.host_history is not None
         v = np.asarray(valid, bool)
         if v.any():
-            self.host_history.record(
-                np.asarray(ids, np.int64)[v], np.asarray(losses)[v], step,
-                signals=None if signals is None
-                else np.asarray(signals, np.float32)[v],
-            )
+            with obs.span("recorder.record_host", n=int(v.sum())):
+                self.host_history.record(
+                    np.asarray(ids, np.int64)[v], np.asarray(losses)[v], step,
+                    signals=None if signals is None
+                    else np.asarray(signals, np.float32)[v],
+                )
+
+    def counters(self, state: RecorderState) -> tuple[int, int]:
+        """(n_recorded, n_miss) as Python ints in ONE batched device_get —
+        ``Engine.stats()`` calls this instead of fetching each scalar
+        separately."""
+        n_rec, n_miss = jax.device_get((state.n_recorded, state.n_miss))
+        return int(n_rec), int(n_miss)
 
     def state_dict(self, state: RecorderState) -> dict[str, np.ndarray]:
         if self.ledger == "host":

@@ -262,3 +262,46 @@ def test_policy_check_runs_from_main_without_prev(tmp_path, capsys):
     assert main([str(tmp_path / "absent.txt"), str(curr)]) == 0
     out = capsys.readouterr().out
     assert "POLICY entropy behind uniform" in out
+
+
+def test_emit_metrics_writes_obs_jsonl(tmp_path):
+    """--emit-metrics lands every verdict as a bench_verdict event plus
+    one bench_summary, in the obs JSONL schema (t/seq/kind per line) —
+    the nightly's verdicts join the same stream the drivers write."""
+    import json
+
+    prev = tmp_path / "prev.txt"
+    curr = tmp_path / "curr.txt"
+    prev.write_text("\n".join([
+        HDR_SEL,
+        "selection,obftf,128,10.0,0.1",
+        "selection,gone,128,10.0,0.1",
+    ]) + "\n")
+    curr.write_text("\n".join([
+        HDR_SEL,
+        "selection,obftf,128,40.0,0.1",  # 4x slower: regression
+    ]) + "\n")
+    out = tmp_path / "verdicts.jsonl"
+    assert main([str(prev), str(curr), "--emit-metrics", str(out),
+                 "--run-label", "r1"]) == 0
+    rows = [json.loads(line) for line in out.read_text().splitlines()]
+    assert [r["seq"] for r in rows] == list(range(len(rows)))
+    assert all({"t", "seq", "kind"} <= set(r) for r in rows)
+    checks = [r["check"] for r in rows if r["kind"] == "bench_verdict"]
+    assert sorted(checks) == ["missing", "regression"]
+    summary = rows[-1]
+    assert summary["kind"] == "bench_summary"
+    assert summary["regressions"] == 1 and summary["missing"] == 1
+    assert summary["label"] == "r1"
+
+
+def test_emit_metrics_clean_run_summary_only(tmp_path):
+    import json
+
+    curr = tmp_path / "curr.txt"
+    curr.write_text(HDR_SEL + "\nselection,obftf,128,10.0,0.1\n")
+    out = tmp_path / "verdicts.jsonl"
+    assert main([str(curr), str(curr), "--emit-metrics", str(out)]) == 0
+    rows = [json.loads(line) for line in out.read_text().splitlines()]
+    assert len(rows) == 1 and rows[0]["kind"] == "bench_summary"
+    assert rows[0]["regressions"] == 0 and rows[0]["policies"] == 0

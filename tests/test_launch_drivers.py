@@ -2,6 +2,7 @@
 serve, run as subprocesses exactly as a user would."""
 
 import os
+import re
 import signal
 import subprocess
 import sys
@@ -19,9 +20,13 @@ CWD = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _run(args, timeout=600):
+    # explicit utf-8 + replace: XLA teardown can emit binary bytes into
+    # the captured streams; the default locale codec made that a decode
+    # error unrelated to what the test checks
     return subprocess.run(
         [sys.executable, "-m", *args],
-        capture_output=True, text=True, timeout=timeout, env=ENV, cwd=CWD,
+        capture_output=True, text=True, encoding="utf-8", errors="replace",
+        timeout=timeout, env=ENV, cwd=CWD,
     )
 
 
@@ -54,16 +59,19 @@ def test_train_sigterm_checkpoints(tmp_path):
         # the XLA runtime sometimes dumps a binary native backtrace to the
         # merged stream while tearing down after SIGTERM; a strict decode
         # would throw even though the driver checkpointed and exited 0
-        errors="replace",
+        encoding="utf-8", errors="replace",
         env=ENV, cwd=CWD,
     )
-    # wait for a couple of steps, then preempt
+    # wait for a couple of steps, then preempt — parsing the step number
+    # rather than matching the progress line's column padding (an
+    # exact-width match never fires again when the alignment shifts)
     deadline = time.time() + 420
     lines = []
     while time.time() < deadline:
         line = proc.stdout.readline()
         lines.append(line)
-        if "step     2" in line:
+        m = re.match(r"step\s+(\d+)\b", line)
+        if m and int(m.group(1)) >= 2:
             break
     proc.send_signal(signal.SIGTERM)
     out, _ = proc.communicate(timeout=300)

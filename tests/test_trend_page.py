@@ -1,0 +1,66 @@
+"""Trend page renderer: charts from committed history, empty-state page."""
+
+from benchmarks.diff_tables import update_history
+from benchmarks.trend_page import collect_charts, main, render
+
+HDR = "table,path,capacity,batch,us_per_step"
+
+
+def _history(tmp_path, runs):
+    hd = str(tmp_path / "hist")
+    for label, vals in runs:
+        text = "\n".join(
+            [HDR] + [f"ledger,{p},16384,256,{v}" for p, v in vals.items()]
+        )
+        update_history(hd, text, label)
+    return hd
+
+
+def test_collect_charts_series_and_gaps(tmp_path):
+    hd = _history(tmp_path, [
+        ("d1", {"host": 100.0, "device": 50.0}),
+        ("d2", {"host": 110.0}),               # device missing mid-series
+        ("d3", {"host": 105.0, "device": 55.0}),
+    ])
+    charts = collect_charts(hd)
+    assert len(charts) == 1
+    c = charts[0]
+    assert c["table"] == "ledger" and c["metric"] == "us_per_step"
+    assert c["labels"] == ["d1", "d2", "d3"]
+    by_name = {s["name"]: s for s in c["series"]}
+    assert by_name["device|capacity=16384|batch=256"]["values"] == \
+        [50.0, None, 55.0]
+    # slots fixed by sorted-key order, within the palette depth
+    assert sorted(s["slot"] for s in c["series"]) == [0, 1]
+
+
+def test_facets_past_palette_depth(tmp_path):
+    vals = {f"p{i:02d}": float(i) for i in range(11)}
+    hd = _history(tmp_path, [("d1", vals), ("d2", vals)])
+    charts = collect_charts(hd)
+    assert [c["part"] for c in charts] == [(1, 2), (2, 2)]
+    assert len(charts[0]["series"]) == 8 and len(charts[1]["series"]) == 3
+    assert all(0 <= s["slot"] <= 7 for c in charts for s in c["series"])
+
+
+def test_render_page_and_empty_state(tmp_path):
+    hd = _history(tmp_path, [
+        ("d1", {"host": 100.0, "device": 50.0}),
+        ("d2", {"host": 140.0, "device": 45.0}),
+    ])
+    page = render(collect_charts(hd), "t")
+    assert "<svg" in page and 'class="legend"' in page
+    assert "Table view" in page  # every chart has its table twin
+    # deltas carry a word, never color alone; time-like up is worse
+    assert "worse" in page and "better" in page
+    assert "prefers-color-scheme" in page and "data-theme" in page
+    empty = render([], "t")
+    assert "No benchmark history yet" in empty
+
+
+def test_main_writes_file(tmp_path):
+    hd = _history(tmp_path, [("d1", {"host": 100.0})])
+    out = str(tmp_path / "site" / "index.html")
+    assert main(["--history-dir", hd, "--out", out]) == 0
+    with open(out, encoding="utf-8") as f:
+        assert "<!doctype html>" in f.read()
